@@ -1,0 +1,91 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod1]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+import re
+
+_BASE = re.compile(r"__(" + "|".join(SHAPE_ORDER) + r")\.json$")
+
+
+def load(mesh="pod1", fl="baseline", base="experiments/dryrun"):
+    out = {}
+    for f in glob.glob(os.path.join(base, mesh, fl, "*.json")):
+        if not _BASE.search(os.path.basename(f)):
+            continue   # skip §Perf-tagged experiment records
+        with open(f) as fh:
+            r = json.load(fh)
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_sec(s):
+    if s >= 100:
+        return f"{s:,.0f}"
+    if s >= 1:
+        return f"{s:.2f}"
+    return f"{s:.2e}"
+
+
+def table(recs, full=True):
+    rows = []
+    hdr = ("| arch | shape | ok | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO flops | peak GB/dev | collectives |")
+    sep = "|" + "---|" * 10
+    rows += [hdr, sep]
+    archs = sorted({a for a, _ in recs})
+    for a in archs:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                continue
+            if not r.get("ok"):
+                rows.append(f"| {a} | {s} | FAIL | | | | | | | "
+                            f"{r.get('error','')[:60]} |")
+                continue
+            t = r["roofline"]
+            cbt = r.get("coll_by_type", {})
+            cstr = " ".join(f"{k.split('-')[-1][:4]}:{v/1e9:.1f}G"
+                            for k, v in sorted(cbt.items()))
+            rows.append(
+                f"| {a} | {s} | ok | {fmt_sec(t['compute_s'])} | "
+                f"{fmt_sec(t['memory_s'])} | {fmt_sec(t['collective_s'])} | "
+                f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+                f"{r['memory']['peak_gb']:.1f} | {cstr} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--fl", default="baseline")
+    args = ap.parse_args()
+    recs = load(args.mesh, args.fl)
+    print(f"### {args.mesh} / {args.fl} ({len(recs)} records)\n")
+    print(table(recs))
+    # worst roofline fraction (compute/total) and most collective-bound
+    ok = [r for r in recs.values() if r.get("ok")]
+    def frac(r):
+        t = r["roofline"]
+        tot = t["compute_s"] + t["memory_s"] + t["collective_s"]
+        return t["compute_s"] / tot if tot else 0
+    worst = min(ok, key=frac)
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+               / max(sum(r["roofline"].values()), 1e-9))
+    print(f"\nworst compute fraction: {worst['arch']}/{worst['shape']} "
+          f"({frac(worst):.3f})")
+    print(f"most collective-bound: {coll['arch']}/{coll['shape']} "
+          f"(coll {coll['roofline']['collective_s']:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

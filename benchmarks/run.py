@@ -1,0 +1,388 @@
+"""Benchmark harness — one benchmark per surveyed claim family (the paper is
+a survey; its "tables" are method families, and each bench reproduces that
+family's headline quantitative claim on the paper-faithful small FL workload).
+
+Output: ``name,us_per_call,derived`` CSV (one row per configuration).
+
+  compression      §III.B.5  wire bytes + fidelity per compressor
+  kernels          Pallas kernels (interpret) vs jnp oracle timing
+  convergence      §III.B.1  FedAvg vs FedProx vs SCAFFOLD on non-iid [46]
+  bytes_to_loss    §III.B.5  loss-vs-cumulative-bytes: compression wins [39,45]
+  selection        §III.B.2  Power-of-Choice vs random [54]
+  hierarchy        §III.B.3  flat vs hierarchical sync cost model [45,73]
+  roofline         §Dry-run  per-arch roofline terms (reads experiments/)
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--only NAME] [--rounds N]``
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress import make_compressor
+from repro.configs.registry import get_arch
+from repro.core.simulate import make_sim_step
+from repro.core.types import FLConfig
+from repro.data.synthetic import FedDataConfig, eval_batch, sample_round
+from repro.models.model import Model
+
+ROWS = []
+
+
+def emit(name, us_per_call, **derived):
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    ROWS.append(f"{name},{us_per_call:.1f},{d}")
+    print(ROWS[-1], flush=True)
+
+
+def _timeit(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))           # compile/warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+def bench_compression(rounds):
+    n = 1 << 20
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    for name in ["none", "qsgd8", "qsgd4", "uveq", "hsq", "topk", "stc",
+                 "sbc", "randmask", "sketch"]:
+        comp = make_compressor(name, fraction=0.01)
+        rt = jax.jit(lambda r, v: comp.roundtrip(r, v))
+        us = _timeit(rt, jax.random.PRNGKey(1), x)
+        y = rt(jax.random.PRNGKey(1), x)
+        cos = float((x @ y) / (jnp.linalg.norm(x) * jnp.linalg.norm(y) + 1e-9))
+        emit(f"compression/{name}", us,
+             wire_mb=round(comp.wire_bits(n) / 8e6, 4),
+             entropy_mb=round(comp.entropy_bits(n) / 8e6, 4),
+             ratio_vs_f32=round(32.0 * n / comp.wire_bits(n), 2),
+             cosine=round(cos, 4))
+
+
+def bench_kernels(rounds):
+    from repro.kernels import ops, ref
+    from repro.compress.sketch import hash_params
+    n = 1 << 18
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    u = jax.random.uniform(jax.random.PRNGKey(1), (n,))
+    xb, _ = ops._to_blocked(x, 2048)
+    ub, _ = ops._to_blocked(u, 2048)
+    t = jnp.float32(1.0)
+    a, b = hash_params(5)
+
+    pairs = [
+        ("qsgd", lambda: ops.qsgd_quantize(x, u, 8, 2048),
+         lambda: ref.ref_qsgd_quantize_blocked(xb, ub, 8)),
+        ("ternary", lambda: ops.stc_ternarize(x, 0.01, 2048),
+         lambda: ref.ref_ternarize_blocked(xb, t)),
+        ("topk_mask", lambda: ops.threshold_sparsify(x, t, 2048),
+         lambda: ref.ref_threshold_sparsify_blocked(xb, t)),
+        ("count_sketch", lambda: ops.sketch(x, 5, 4096),
+         lambda: ref.ref_count_sketch(x, a, b, 5, 4096)),
+    ]
+    for name, kfn, rfn in pairs:
+        kus = _timeit(kfn)
+        rus = _timeit(rfn)
+        emit(f"kernels/{name}", kus, ref_us=round(rus, 1),
+             note="interpret-mode-on-cpu")
+
+
+def _fl_run(fl: FLConfig, rounds, het=2.0, clients=8, seed=0):
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    dcfg = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=clients,
+                         seq_len=48, batch_per_client=4, heterogeneity=het,
+                         seed=seed)
+    sim = make_sim_step(model, fl, clients, chunk=48)
+    state = sim.init_fn(jax.random.PRNGKey(seed))
+    ev = eval_batch(dcfg, jax.random.PRNGKey(99), batch_size=8)
+    losses, bytes_cum, t0 = [], [0.0], time.perf_counter()
+    evl = jax.jit(lambda p: model.loss(p, ev, chunk=48)[0])
+    for r in range(rounds):
+        batch = sample_round(dcfg, jax.random.fold_in(
+            jax.random.PRNGKey(seed + 1), r))
+        state, m = sim.step_fn(state, batch)
+        losses.append(float(evl(state.params)))
+        bytes_cum.append(bytes_cum[-1]
+                         + float(m["ledger"].uplink_wire)
+                         + float(m["ledger"].downlink_wire))
+    us = (time.perf_counter() - t0) / rounds * 1e6
+    return losses, bytes_cum[1:], us
+
+
+def bench_convergence(rounds):
+    """SCAFFOLD/FedProx vs FedAvg under client drift (non-iid, E=4) on the
+    LM task, plus the canonical heterogeneous-quadratic drift construction
+    from Karimireddy et al. [46] where the claim is provable."""
+    res = {}
+    for name, fl in [
+        ("fedavg", FLConfig(algorithm="fedavg", local_steps=4, local_lr=0.2)),
+        ("fedprox", FLConfig(algorithm="fedprox", local_steps=4,
+                             local_lr=0.2, fedprox_mu=0.1)),
+        ("scaffold", FLConfig(algorithm="scaffold", local_steps=4,
+                              local_lr=0.2)),
+        ("fedavg_iid", FLConfig(algorithm="fedavg", local_steps=4,
+                                local_lr=0.2)),
+    ]:
+        het = 0.0 if name.endswith("iid") else 2.5
+        losses, _, us = _fl_run(fl, rounds, het=het)
+        res[name] = losses
+        emit(f"convergence/{name}", us, het=het,
+             loss_r5=round(losses[min(4, len(losses) - 1)], 4),
+             loss_final=round(losses[-1], 4))
+    emit("convergence/noniid_vs_iid_fedavg", 0.0,
+         iid=round(res["fedavg_iid"][-1], 4),
+         noniid=round(res["fedavg"][-1], 4),
+         note="absolute-losses-not-comparable(entropy-differs-by-het)")
+
+    # [46]'s drift construction: heterogeneous quadratics, E=10 local steps.
+    # FedAvg converges to a biased point; SCAFFOLD to the true optimum.
+    from repro.core.federated import _client_update
+    d, C = 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    Q = jax.random.normal(ks[0], (C, d, d))
+    A = jnp.einsum("cij,ckj->cik", Q, Q) / d + 0.1 * jnp.eye(d)
+    b = jax.random.normal(ks[1], (C, d)) * 3.0
+    wstar = jnp.linalg.solve(A.sum(0), jnp.einsum("cij,cj->i", A, b))
+
+    class QuadModel:
+        def loss(self, p, batch, chunk=0):
+            r = p["w"] - batch["b"]
+            return 0.5 * r @ batch["A"] @ r, {}
+
+    def run(algo, E=10, lr=0.05, R=60):
+        fl = FLConfig(algorithm=algo, local_steps=E, local_lr=lr)
+        params, c = {"w": jnp.zeros(d)}, {"w": jnp.zeros(d)}
+        ci = {"w": jnp.zeros((C, d))}
+        step = jax.jit(lambda params, c, ci: jax.vmap(
+            lambda bA, bb, cci: _client_update(
+                QuadModel(), fl, params, {"A": bA, "b": bb},
+                jax.random.PRNGKey(0), c, {"w": cci}, 0))(A, b, ci["w"]))
+        for _ in range(R):
+            deltas, _, _, new_ci = step(params, c, ci)
+            params = jax.tree.map(lambda p, g: p + g.mean(0), params, deltas)
+            if algo == "scaffold":
+                c = jax.tree.map(lambda cc, n, o: cc + (n - o).mean(0),
+                                 c, new_ci, ci)
+                ci = new_ci
+        return float(jnp.linalg.norm(params["w"] - wstar))
+
+    e_avg, e_scaf = run("fedavg"), run("scaffold")
+    emit("convergence/claim_scaffold_fixes_drift_quadratic", 0.0,
+         holds=bool(e_scaf < 0.01 * e_avg),
+         fedavg_bias=round(e_avg, 5), scaffold_err=round(e_scaf, 6))
+
+
+def bench_bytes_to_loss(rounds):
+    """The survey's central trade-off: accuracy vs communication bytes."""
+    runs = {}
+    for name, fl in [
+        ("dense_f32", FLConfig(algorithm="fedavg", local_steps=2,
+                               local_lr=0.2)),
+        ("qsgd8+lfl", FLConfig(algorithm="fedavg", local_steps=2,
+                               local_lr=0.2, uplink_compressor="qsgd8",
+                               downlink_compressor="lfl8")),
+        ("qsgd4", FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                           uplink_compressor="qsgd4")),
+        # STC [39] compresses BOTH directions ("upstream and downstream")
+        ("stc_1pct", FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                              uplink_compressor="stc", topk_fraction=0.01,
+                              downlink_compressor="lfl8")),
+        ("topk_1pct", FLConfig(algorithm="fedavg", local_steps=2,
+                               local_lr=0.2, uplink_compressor="topk",
+                               topk_fraction=0.01)),
+        ("sketch", FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.1,
+                            uplink_compressor="sketch",
+                            topk_fraction=0.1)),
+    ]:
+        losses, bytes_cum, us = _fl_run(fl, rounds)
+        runs[name] = (losses, bytes_cum)
+        emit(f"bytes_to_loss/{name}", us,
+             loss_final=round(losses[-1], 4),
+             mb_total=round(bytes_cum[-1] / 1e6, 2))
+    # bytes to reach the common target loss
+    target = max(l[-1] for l, _ in runs.values()) + 0.02
+    base_mb = None
+    order = list(runs)
+    for name in order:
+        losses, bytes_cum = runs[name]
+        idx = next((i for i, l in enumerate(losses) if l <= target), None)
+        mb = bytes_cum[idx] / 1e6 if idx is not None else float("inf")
+        if name == "dense_f32":
+            base_mb = mb
+        emit(f"bytes_to_loss/target/{name}", 0.0, target=round(target, 3),
+             mb_to_target=round(mb, 3),
+             saving_vs_dense=(round(base_mb / mb, 2)
+                              if mb and base_mb not in (None, 0) else 0))
+
+
+def bench_selection(rounds):
+    res = {}
+    for name, fl in [
+        ("all", FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2)),
+        ("random_4of16", FLConfig(algorithm="fedavg", local_steps=2,
+                                  local_lr=0.2, selection="random",
+                                  clients_per_round=4)),
+        ("power_of_choice_4of16", FLConfig(algorithm="fedavg", local_steps=2,
+                                           local_lr=0.2,
+                                           selection="power_of_choice",
+                                           clients_per_round=4)),
+        ("multi_criteria_4of16", FLConfig(algorithm="fedavg", local_steps=2,
+                                          local_lr=0.2,
+                                          selection="multi_criteria",
+                                          clients_per_round=4)),
+    ]:
+        losses, bytes_cum, us = _fl_run(fl, rounds, clients=16)
+        res[name] = losses
+        emit(f"selection/{name}", us, loss_final=round(losses[-1], 4),
+             mb=round(bytes_cum[-1] / 1e6, 2))
+    # the claim is about expected behaviour — average over seeds (a single
+    # 30-round run sits within seed noise)
+    pocs, rands = [res["power_of_choice_4of16"][-1]], [res["random_4of16"][-1]]
+    for seed in (1, 2):
+        fl_p = FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                        selection="power_of_choice", clients_per_round=4)
+        fl_r = FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                        selection="random", clients_per_round=4)
+        pocs.append(_fl_run(fl_p, rounds, clients=16, seed=seed)[0][-1])
+        rands.append(_fl_run(fl_r, rounds, clients=16, seed=seed)[0][-1])
+    poc_m, rand_m = float(np.mean(pocs)), float(np.mean(rands))
+    emit("selection/claim_poc_beats_random", 0.0,
+         holds=bool(poc_m <= rand_m + 0.02), seeds=len(pocs),
+         poc_mean=round(poc_m, 4), rand_mean=round(rand_m, 4))
+
+
+def bench_hierarchy(rounds):
+    """Cost model for Hier-Local-QSGD / FedPAQ periodic averaging: cloud (DCN)
+    bytes drop by ~sync_every; edge (ICI) traffic unchanged."""
+    from repro.core.federated import ledger_terms
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    n = model.param_count()
+    for sync_every in (1, 2, 4, 8):
+        fl = FLConfig(hierarchical=True, sync_every=sync_every,
+                      uplink_compressor="qsgd8", pod_compressor="qsgd8")
+        _, up, _ = ledger_terms(model, fl)
+        edge = 16 * up.wire_bits(n) / 8e6          # 16 clients/pod, per round
+        cloud = 2 * up.wire_bits(n) / 8e6 / sync_every  # 2 pods, amortised
+        emit(f"hierarchy/sync_every_{sync_every}", 0.0,
+             edge_mb_per_round=round(edge, 3),
+             cloud_mb_per_round=round(cloud, 3),
+             dcn_saving=round(float(sync_every), 1))
+
+
+def bench_extensions(rounds):
+    """FedDANE [49], CMFL [35], FL+HC [43] — §III.B.1/.3 completions."""
+    import numpy as _np
+    from repro.core.clustering import (adjusted_match, agglomerate,
+                                       pairwise_delta_distance)
+    from repro.core.federated import _client_update
+    from repro.data.synthetic import client_clusters
+
+    # FedDANE converges on the LM task at 2x wire per round
+    fl = FLConfig(algorithm="feddane", local_steps=4, local_lr=0.1,
+                  fedprox_mu=0.01)
+    losses, bytes_cum, us = _fl_run(fl, max(8, rounds // 3))
+    emit("extensions/feddane", us, loss_final=round(losses[-1], 4),
+         mb=round(bytes_cum[-1] / 1e6, 2), wire_factor=2.0)
+
+    # CMFL: relevance filtering cuts uploads at comparable loss
+    base = FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2)
+    filt = FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                    cmfl_threshold=0.5)
+    lb, bb, _ = _fl_run(base, rounds)
+    lf, bf, us = _fl_run(filt, rounds)
+    emit("extensions/cmfl", us,
+         loss_base=round(lb[-1], 4), loss_cmfl=round(lf[-1], 4),
+         mb_base=round(bb[-1] / 1e6, 2), mb_cmfl=round(bf[-1] / 1e6, 2),
+         upload_saving=round(bb[-1] / max(bf[-1], 1.0), 2),
+         note="sign-agreement-concentrates-near-0.5-so-threshold-is-sharp")
+
+    # FL+HC: update-similarity clustering recovers the generator clusters
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    C = 8
+    dcfg = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=C,
+                         seq_len=32, batch_per_client=4, heterogeneity=6.0,
+                         client_skew=0.0, num_clusters=2, seed=3)
+    flh = FLConfig(algorithm="fedavg", local_steps=4, local_lr=0.3)
+    params = model.init(jax.random.PRNGKey(0))
+    deltas = None
+    for r in range(3):
+        b = sample_round(dcfg, jax.random.fold_in(jax.random.PRNGKey(4), r))
+        deltas, _, _, _ = jax.vmap(lambda tok, lab, msk: _client_update(
+            model, flh, params, {"tokens": tok, "labels": lab, "mask": msk},
+            jax.random.PRNGKey(0), None, None, 32))(
+            b["tokens"], b["labels"], b["mask"])
+        params = jax.tree.map(
+            lambda p, d: (p + d.mean(0)).astype(p.dtype), params, deltas)
+    flat = _np.concatenate([_np.asarray(l.reshape(C, -1), _np.float32)
+                            for l in jax.tree.leaves(deltas)], axis=1)
+    D = pairwise_delta_distance(flat, "cosine")
+    labels = agglomerate(D, threshold=float(_np.median(D)))
+    score = adjusted_match(labels, _np.asarray(client_clusters(dcfg)))
+    emit("extensions/flhc_cluster_recovery", 0.0,
+         pairwise_match=round(score, 3), holds=bool(score >= 0.7))
+
+
+def bench_roofline(rounds):
+    import sys
+    sys.path.insert(0, os.path.dirname(__file__))
+    from roofline_report import load
+    base = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "dryrun")
+    recs = load("pod1", "baseline", base)
+    if not recs:
+        emit("roofline/missing", 0.0,
+             note="run repro.launch.dryrun first")
+        return
+    for (arch, shape), r in sorted(recs.items()):
+        if not r.get("ok"):
+            emit(f"roofline/{arch}/{shape}", 0.0, ok=False)
+            continue
+        t = r["roofline"]
+        emit(f"roofline/{arch}/{shape}", r["total_s"] * 1e6,
+             compute_s=round(t["compute_s"], 3),
+             memory_s=round(t["memory_s"], 3),
+             collective_s=round(t["collective_s"], 3),
+             dominant=r["dominant"],
+             useful_flops=round(r["useful_flops_ratio"], 3))
+
+
+BENCHES = {
+    "compression": bench_compression,
+    "kernels": bench_kernels,
+    "convergence": bench_convergence,
+    "bytes_to_loss": bench_bytes_to_loss,
+    "selection": bench_selection,
+    "hierarchy": bench_hierarchy,
+    "extensions": bench_extensions,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--rounds", type=int, default=25)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        fn(args.rounds)
+
+
+if __name__ == '__main__':
+    main()

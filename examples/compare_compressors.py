@@ -1,0 +1,75 @@
+"""Reproduce the survey's central figure: accuracy vs cumulative bytes for
+every compression family, on the same non-iid federated LM task.
+
+    PYTHONPATH=src python examples/compare_compressors.py --rounds 30
+
+Prints an aligned table plus an ASCII loss-vs-MB plot.
+"""
+import argparse
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.core.simulate import make_sim_step
+from repro.core.types import FLConfig
+from repro.data.synthetic import FedDataConfig, eval_batch, sample_round
+from repro.models.model import Model
+
+METHODS = {
+    "dense_f32": FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2),
+    "qsgd8": FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                      uplink_compressor="qsgd8"),
+    "qsgd8+lfl8": FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                           uplink_compressor="qsgd8",
+                           downlink_compressor="lfl8"),
+    "stc_1%": FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                       uplink_compressor="stc", topk_fraction=0.01),
+    "topk_1%": FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                        uplink_compressor="topk", topk_fraction=0.01),
+    "sbc_1%": FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                       uplink_compressor="sbc", topk_fraction=0.01),
+    "sketch": FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.1,
+                       uplink_compressor="sketch"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    args = ap.parse_args()
+
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    data = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=8,
+                         seq_len=48, batch_per_client=4, heterogeneity=2.0)
+    ev = eval_batch(data, jax.random.PRNGKey(99), batch_size=8)
+    evl = jax.jit(lambda p: model.loss(p, ev, chunk=48)[0])
+
+    results = {}
+    for name, fl in METHODS.items():
+        sim = make_sim_step(model, fl, 8, chunk=48)
+        state = sim.init_fn(jax.random.PRNGKey(0))
+        cum, curve = 0.0, []
+        for r in range(args.rounds):
+            b = sample_round(data, jax.random.fold_in(jax.random.PRNGKey(1), r))
+            state, m = sim.step_fn(state, b)
+            cum += float(m["ledger"].uplink_wire + m["ledger"].downlink_wire)
+            curve.append((cum / 1e6, float(evl(state.params))))
+        results[name] = curve
+        print(f"{name:>12}: final eval {curve[-1][1]:.3f} "
+              f"after {curve[-1][0]:8.2f} MB", flush=True)
+
+    print("\nloss vs cumulative MB (log-ish buckets)")
+    header = f"{'MB<=':>8}" + "".join(f"{n:>12}" for n in results)
+    print(header)
+    for budget in (1, 3, 10, 30, 100, 300, 1000):
+        row = f"{budget:>8}"
+        for name, curve in results.items():
+            best = min((l for mb, l in curve if mb <= budget),
+                       default=float("nan"))
+            row += f"{best:>12.3f}"
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end federated LM training driver (deliverable b).
+
+    PYTHONPATH=src python examples/train_federated_lm.py \
+        --preset 100m --rounds 300 --compressor stc --checkpoint ckpt.npz
+
+Presets scale the same llama-style family from CPU-friendly (~4M) to the
+~100M model the assignment's end-to-end driver calls for — the 100m preset
+trains a 12L/768d model for a few hundred rounds (hours on this 1-core CPU
+container; minutes on a real slice). Evaluation, the communication ledger,
+and npz checkpointing are all exercised. Resume with --restore.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint
+from repro.core.simulate import make_sim_step
+from repro.core.types import ArchConfig, FLConfig
+from repro.data.synthetic import FedDataConfig, eval_batch, sample_round
+from repro.models.model import Model
+
+PRESETS = {
+    "4m": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+               d_ff=1024),
+    "25m": dict(num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
+                d_ff=2048),
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 d_ff=3072),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="4m", choices=list(PRESETS))
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--compressor", default="qsgd8")
+    ap.add_argument("--algorithm", default="fedavg",
+                    choices=["fedavg", "fedsgd", "fedprox", "scaffold"])
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--restore", default="")
+    ap.add_argument("--eval-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = ArchConfig(name=f"fed-lm-{args.preset}", family="dense",
+                     vocab_size=4096, block_pattern=("attn+mlp",),
+                     dtype=jnp.float32, remat=False, **PRESETS[args.preset])
+    model = Model(cfg)
+    fl = FLConfig(algorithm=args.algorithm, local_steps=args.local_steps,
+                  local_lr=0.1, uplink_compressor=args.compressor,
+                  fedprox_mu=0.01 if args.algorithm == "fedprox" else 0.0)
+    data = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=args.clients,
+                         seq_len=args.seq, batch_per_client=4,
+                         heterogeneity=1.5)
+
+    sim = make_sim_step(model, fl, args.clients, chunk=min(args.seq, 128))
+    state = sim.init_fn(jax.random.PRNGKey(0))
+    if args.restore:
+        state.params = checkpoint.restore(args.restore, state.params)
+        print(f"restored {args.restore}")
+
+    ev = eval_batch(data, jax.random.PRNGKey(99), batch_size=4)
+    evl = jax.jit(lambda p: model.loss(p, ev, chunk=min(args.seq, 128))[0])
+
+    print(f"model={cfg.name} params={model.param_count():,} "
+          f"clients={args.clients} E={fl.local_steps} "
+          f"compressor={args.compressor}")
+    cum, t0 = 0.0, time.time()
+    for r in range(args.rounds):
+        batch = sample_round(data, jax.random.fold_in(jax.random.PRNGKey(1), r))
+        state, m = sim.step_fn(state, batch)
+        cum += float(m["ledger"].uplink_wire + m["ledger"].downlink_wire)
+        if (r + 1) % args.eval_every == 0 or r == args.rounds - 1:
+            el = float(evl(state.params))
+            dt = time.time() - t0
+            print(f"round {r+1:>4}  train={float(m['loss']):.3f} "
+                  f"eval={el:.3f}  comm={cum/1e6:,.1f}MB  "
+                  f"({dt/(r+1):.2f}s/round)", flush=True)
+            if args.checkpoint:
+                checkpoint.save(args.checkpoint, state.params)
+    if args.checkpoint:
+        print(f"saved {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

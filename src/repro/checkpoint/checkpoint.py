@@ -1,0 +1,46 @@
+"""Flat-npz pytree checkpointing (server global model + FL state).
+
+Key encoding: pytree paths joined with '/'. Works for any pytree of arrays;
+restores onto the caller-provided target structure (and shardings, if given).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore(path: str, target: PyTree, shardings: PyTree | None = None) -> PyTree:
+    with np.load(path) as data:
+        flat = dict(data)
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(target)
+    out = []
+    for p, leaf in leaves_p:
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
+                        for q in p)
+        arr = flat[key]
+        assert arr.shape == tuple(np.shape(leaf)), (key, arr.shape, np.shape(leaf))
+        out.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree

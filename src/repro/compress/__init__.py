@@ -1,0 +1,4 @@
+from repro.compress.api import Compressor, Identity, make_compressor
+from repro.compress import quantization, sparsification, sketch  # registers
+
+__all__ = ["Compressor", "Identity", "make_compressor"]

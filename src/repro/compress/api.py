@@ -1,0 +1,88 @@
+"""Compressor protocol — the survey's §III.B.5, as a composable operator.
+
+A compressor is a *pure, shape-polymorphic, leaf-wise* pair of maps
+
+    compress(rng, x: f32[n])            -> payload: dict[str, Array]
+    decompress(payload, n)              -> f32[n]
+
+operating on flattened parameter/update leaves.  Compression happens *inside*
+the FL aggregation ``shard_map`` (``repro.core.aggregation``), so the payload
+arrays are exactly what crosses the ICI/DCN links via ``all_gather`` — the
+compiled HLO's collective bytes are the wire bytes.
+
+Byte accounting (``CommLedger``):
+  * ``wire_bits(n)``    — bits our dtype-packed payload occupies on the link.
+  * ``entropy_bits(n)`` — bits the source paper's entropy coder (Golomb/Elias)
+                          would achieve; reported alongside, never used for
+                          shapes. See DESIGN.md §1 (hardware adaptation).
+
+Biased compressors (top-k, STC, SBC, signSGD/HSQ) set ``biased = True`` and
+are wrapped in error feedback by the FL layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Payload = Dict[str, jax.Array]
+
+
+class Compressor:
+    name: str = "base"
+    biased: bool = False
+
+    def compress(self, rng: jax.Array, x: jax.Array) -> Payload:
+        raise NotImplementedError
+
+    def decompress(self, payload: Payload, n: int) -> jax.Array:
+        raise NotImplementedError
+
+    def wire_bits(self, n: int) -> float:
+        raise NotImplementedError
+
+    def entropy_bits(self, n: int) -> float:
+        return self.wire_bits(n)
+
+    # round-trip helper (used by error feedback and tests)
+    def roundtrip(self, rng, x):
+        return self.decompress(self.compress(rng, x), x.shape[0])
+
+
+class Identity(Compressor):
+    """No compression — the FedAvg baseline (f32 on the wire)."""
+    name = "none"
+
+    def compress(self, rng, x):
+        return {"x": x.astype(jnp.float32)}
+
+    def decompress(self, payload, n):
+        return payload["x"]
+
+    def wire_bits(self, n):
+        return 32.0 * n
+
+
+_REGISTRY: Dict[str, Callable[..., Compressor]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def make_compressor(name: str, **kw) -> Compressor:
+    """Build a compressor by registry name, e.g. ``qsgd8``, ``topk``, ``stc``."""
+    if name in ("none", None, ""):
+        return Identity()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kw)
+
+
+register("none")(lambda **kw: Identity())

@@ -1,0 +1,138 @@
+"""Quantization compressors (survey §III.B.5 — Quantization).
+
+  * ``qsgd8`` / ``qsgd4``  — FedPAQ's quantizer [45] = QSGD: stochastic uniform
+    quantization with a per-block scale. Unbiased: E[Q(x)] = x.
+  * ``lfl8``  — Lossy FL [70]: the same quantizer applied to the *downlink*
+    (global-model broadcast); registered separately so ledger reporting can
+    distinguish directions.
+  * ``hsq``   — Hyper-Sphere-Quantization-style [71] 1-bit direction + per-block
+    norm (the vector-codebook is degenerate to the sign codebook on TPU; see
+    DESIGN.md hardware-adaptation notes). Biased -> error feedback.
+  * ``uveq``  — UVeQFed-style [72] subtractive-dither uniform quantizer:
+    dither u ~ U(-Δ/2, Δ/2) added before rounding and subtracted after —
+    unbiased with bounded, input-independent distortion.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.api import Compressor, register
+
+
+def _blocked(x, block):
+    n = x.shape[0]
+    nb = -(-n // block)
+    pad = nb * block - n
+    xb = jnp.pad(x, (0, pad)).reshape(nb, block)
+    return xb, nb, pad
+
+
+class QSGD(Compressor):
+    """Stochastic uniform quantization, per-block max-abs scale, int8 wire."""
+
+    def __init__(self, bits=8, block=2048, use_kernel=False):
+        assert 2 <= bits <= 8
+        self.bits = bits
+        self.block = block
+        self.levels = 2 ** (bits - 1) - 1        # signed levels
+        self.name = f"qsgd{bits}"
+        self.use_kernel = use_kernel
+
+    def compress(self, rng, x):
+        if self.use_kernel:
+            from repro.kernels import ops
+            u = jax.random.uniform(rng, x.shape, jnp.float32)
+            q, scale = ops.qsgd_quantize(x, u, self.bits, self.block)
+            return {"q": q, "scale": scale}
+        xb, nb, _ = _blocked(x.astype(jnp.float32), self.block)
+        scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+        y = xb / jnp.maximum(scale, 1e-30) * self.levels
+        u = jax.random.uniform(rng, xb.shape, jnp.float32)
+        q = jnp.floor(y + u).astype(jnp.int8)
+        return {"q": q, "scale": scale[:, 0]}
+
+    def decompress(self, payload, n):
+        q = payload["q"].astype(jnp.float32)
+        scale = payload["scale"][:, None]
+        x = q / self.levels * scale
+        return x.reshape(-1)[:n]
+
+    def wire_bits(self, n):
+        nb = -(-n // self.block)
+        return 8.0 * n + 32.0 * nb               # int8 storage + f32 scales
+
+    def entropy_bits(self, n):
+        nb = -(-n // self.block)
+        # Elias-coded QSGD costs ~bits+1 per coordinate; at 8 bits the int8
+        # dtype packing is already at least as tight, so take the min.
+        return min(float(self.bits + 1), 8.0) * n + 32.0 * nb
+
+
+class UVeQ(Compressor):
+    """Subtractive-dither uniform quantization (UVeQFed-style, unbiased)."""
+
+    def __init__(self, bits=4, block=2048):
+        self.bits = bits
+        self.block = block
+        self.name = f"uveq{bits}"
+
+    def compress(self, rng, x):
+        xb, nb, _ = _blocked(x.astype(jnp.float32), self.block)
+        scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+        delta = jnp.maximum(scale, 1e-30) / (2 ** (self.bits - 1) - 1)
+        u = jax.random.uniform(rng, xb.shape, jnp.float32, -0.5, 0.5) * delta
+        q = jnp.round((xb + u) / delta).astype(jnp.int8)
+        return {"q": q, "scale": scale[:, 0], "useed": rng}
+
+    def decompress(self, payload, n):
+        scale = payload["scale"][:, None]
+        delta = jnp.maximum(scale, 1e-30) / (2 ** (self.bits - 1) - 1)
+        xb = payload["q"].astype(jnp.float32) * delta
+        # subtractive dither: receiver regenerates u from the shared seed
+        u = jax.random.uniform(payload["useed"], xb.shape, jnp.float32, -0.5, 0.5) * delta
+        return (xb - u).reshape(-1)[:n]
+
+    def wire_bits(self, n):
+        nb = -(-n // self.block)
+        return 8.0 * n + 32.0 * nb + 32.0
+
+    def entropy_bits(self, n):
+        nb = -(-n // self.block)
+        return float(self.bits) * n + 32.0 * nb + 32.0
+
+
+class HSQ(Compressor):
+    """1-bit sign + per-block l2-scaled magnitude (HSQ's codebook degenerated
+    to the sign hypersphere — the TPU-idiomatic variant)."""
+    biased = True
+
+    def __init__(self, block=2048):
+        self.block = block
+        self.name = "hsq"
+
+    def compress(self, rng, x):
+        xb, nb, _ = _blocked(x.astype(jnp.float32), self.block)
+        mu = jnp.mean(jnp.abs(xb), axis=1)
+        return {"sign": jnp.sign(xb).astype(jnp.int8), "mu": mu}
+
+    def decompress(self, payload, n):
+        xb = payload["sign"].astype(jnp.float32) * payload["mu"][:, None]
+        return xb.reshape(-1)[:n]
+
+    def wire_bits(self, n):
+        nb = -(-n // self.block)
+        return 8.0 * n + 32.0 * nb               # int8-stored signs
+
+    def entropy_bits(self, n):
+        nb = -(-n // self.block)
+        return 1.0 * n + 32.0 * nb               # 1 bit/sign after packing
+
+
+register("qsgd8")(lambda block=2048, **kw: QSGD(8, block))
+register("qsgd4")(lambda block=2048, **kw: QSGD(4, block))
+register("lfl8")(lambda block=2048, **kw: QSGD(8, block))
+register("uveq")(lambda block=2048, **kw: UVeQ(4, block))
+register("hsq")(lambda block=2048, **kw: HSQ(block))

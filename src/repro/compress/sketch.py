@@ -1,0 +1,89 @@
+"""Count-sketch compression (FetchSGD [66], Count-Sketch optimizer [74]).
+
+The sketch S is an (r, c) array; coordinate i of the input lands in bucket
+``h_j(i)`` of every row j with sign ``s_j(i)``, both from universal hashing.
+Unsketching estimates x_i as the *median* over rows of ``s_j(i) * S[j, h_j(i)]``
+(median-of-means heavy-hitter recovery).
+
+Crucially the sketch is **linear**: sketch(Σ_c g_c) = Σ_c sketch(g_c), which is
+what lets FetchSGD aggregate client sketches server-side by plain summation —
+on the TPU mesh this means the all-gather payload is the (r, c) sketch, not
+the d-dimensional gradient.
+
+TPU adaptation (see DESIGN.md): scatter-add is hash → one-hot → matmul, which
+maps the accumulation onto the MXU instead of a serial scatter unit. The
+Pallas kernel (``repro.kernels.count_sketch``) implements exactly that; this
+module holds the pure-JAX reference implementation used inside the FL step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.api import Compressor, register
+
+def hash_params(rows: int, seed: int = 17):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    # odd multipliers -> multiplicative hashing over Z/2^32 (uint32 wraparound)
+    a = jax.random.randint(ks[0], (rows,), 1, 1 << 30, dtype=jnp.int32) * 2 + 1
+    b = jax.random.randint(ks[1], (rows,), 0, 1 << 30, dtype=jnp.int32)
+    return a.astype(jnp.uint32), b.astype(jnp.uint32)
+
+
+def bucket_and_sign(i, a, b, cols):
+    """i: (n,) indices; a,b: (r,) uint32. Returns h (r,n) buckets, s (r,n) signs."""
+    ab = a[:, None] * i[None, :].astype(jnp.uint32) + b[:, None]   # mod 2^32
+    h = (ab % jnp.uint32(cols)).astype(jnp.int32)
+    s = jnp.where((ab // jnp.uint32(cols)) % 2 == 0, 1.0, -1.0).astype(jnp.float32)
+    return h, s
+
+
+def sketch(x, rows, cols, seed=17):
+    n = x.shape[0]
+    a, b = hash_params(rows, seed)
+    h, s = bucket_and_sign(jnp.arange(n, dtype=jnp.int32), a, b, cols)
+    sx = s * x.astype(jnp.float32)[None, :]                      # (r, n)
+    S = jax.vmap(lambda hv, v: jnp.zeros(cols, jnp.float32).at[hv].add(v))(h, sx)
+    return S
+
+
+def unsketch(S, n, seed=17):
+    rows, cols = S.shape
+    a, b = hash_params(rows, seed)
+    h, s = bucket_and_sign(jnp.arange(n, dtype=jnp.int32), a, b, cols)
+    est = s * jax.vmap(lambda Sr, hv: Sr[hv])(S, h)              # (r, n)
+    return jnp.median(est, axis=0)
+
+
+class CountSketch(Compressor):
+    """FetchSGD-style sketch; top-k heavy hitters recovered on decompress.
+
+    The sketch width adapts to the leaf size (rows*cols <= n/2) so the wire
+    always beats dense f32 — FetchSGD sketches the whole gradient at a fixed
+    compression ratio; leaf-wise operation needs the same scaling."""
+    biased = True
+
+    def __init__(self, rows=5, cols=4096, topk_fraction=0.01, seed=17):
+        self.rows, self.cols, self.seed = rows, cols, seed
+        self.topk_fraction = topk_fraction
+        self.name = f"sketch{rows}x{cols}"
+
+    def _cols(self, n):
+        return int(min(self.cols, max(8, n // (2 * self.rows))))
+
+    def compress(self, rng, x):
+        return {"S": sketch(x, self.rows, self._cols(x.shape[0]), self.seed)}
+
+    def decompress(self, payload, n):
+        est = unsketch(payload["S"], n, self.seed)
+        k = max(1, int(round(n * self.topk_fraction)))
+        _, idx = jax.lax.top_k(jnp.abs(est), k)
+        out = jnp.zeros((n,), jnp.float32)
+        return out.at[idx].set(est[idx])
+
+    def wire_bits(self, n):
+        return 32.0 * self.rows * self._cols(n)
+
+
+register("sketch")(lambda rows=5, cols=4096, fraction=0.01, **kw:
+                   CountSketch(rows, cols, fraction))

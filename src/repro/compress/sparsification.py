@@ -1,0 +1,161 @@
+"""Sparsification compressors (survey §III.B.5 — Sparsification).
+
+  * ``topk``     — magnitude top-k with (values, indices) wire format; the GGS
+    [67] setting. Biased -> error feedback at the FL layer.
+  * ``stc``      — Sparse Ternary Compression [39]: top-k support, values
+    ternarised to ±mean(|top-k|). Wire = indices + signs + one scalar.
+    The paper's Golomb coding is reported via ``entropy_bits``.
+  * ``sbc``      — Sparse Binary Compression [69]: keep only the dominant-sign
+    half of the top-k support, average its magnitudes (1 fewer bit than STC).
+  * ``randmask`` — CPFed [68]: data-independent random mask (unbiased after
+    1/p rescale) + optional Gaussian noise on the surviving values (DP).
+
+All operate on flattened f32 leaves; k is a static fraction of n (fixed shapes
+under jit — matching the source papers' fixed-sparsity setting).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.api import Compressor, register
+
+
+def _k(n, fraction):
+    return max(1, int(round(n * fraction)))
+
+
+class TopK(Compressor):
+    biased = True
+
+    def __init__(self, fraction=0.01):
+        self.fraction = fraction
+        self.name = f"topk{fraction:g}"
+
+    def compress(self, rng, x):
+        n = x.shape[0]
+        k = _k(n, self.fraction)
+        vals, idx = jax.lax.top_k(jnp.abs(x), k)
+        return {"vals": x[idx], "idx": idx.astype(jnp.int32)}
+
+    def decompress(self, payload, n):
+        out = jnp.zeros((n,), jnp.float32)
+        return out.at[payload["idx"]].set(payload["vals"].astype(jnp.float32))
+
+    def wire_bits(self, n):
+        return _k(n, self.fraction) * (32.0 + 32.0)
+
+    def entropy_bits(self, n):
+        k = _k(n, self.fraction)
+        idx_bits = math.log2(max(n / k, 2.0)) + 2      # Golomb-coded gaps
+        return k * (32.0 + idx_bits)
+
+
+class STC(Compressor):
+    """Sattler et al. [39]: top-k + ternarisation (±mu)."""
+    biased = True
+
+    def __init__(self, fraction=0.01):
+        self.fraction = fraction
+        self.name = f"stc{fraction:g}"
+
+    def compress(self, rng, x):
+        n = x.shape[0]
+        k = _k(n, self.fraction)
+        mag, idx = jax.lax.top_k(jnp.abs(x), k)
+        mu = mag.mean()
+        return {"mu": mu, "idx": idx.astype(jnp.int32),
+                "sign": jnp.sign(x[idx]).astype(jnp.int8)}
+
+    def decompress(self, payload, n):
+        out = jnp.zeros((n,), jnp.float32)
+        vals = payload["sign"].astype(jnp.float32) * payload["mu"]
+        return out.at[payload["idx"]].set(vals)
+
+    def wire_bits(self, n):
+        return _k(n, self.fraction) * (32.0 + 8.0) + 32.0
+
+    def entropy_bits(self, n):
+        k = _k(n, self.fraction)
+        idx_bits = math.log2(max(n / k, 2.0)) + 2
+        return k * (idx_bits + 1.0) + 32.0
+
+
+class SBC(Compressor):
+    """Sattler et al. [69]: binary — keep only the dominant sign's support."""
+    biased = True
+
+    def __init__(self, fraction=0.01):
+        self.fraction = fraction
+        self.name = f"sbc{fraction:g}"
+
+    def compress(self, rng, x):
+        n = x.shape[0]
+        k = _k(n, self.fraction)
+        mag, idx = jax.lax.top_k(jnp.abs(x), k)
+        v = x[idx]
+        pos_sum = jnp.sum(jnp.where(v > 0, v, 0.0))
+        neg_sum = -jnp.sum(jnp.where(v < 0, v, 0.0))
+        s = jnp.where(pos_sum >= neg_sum, 1.0, -1.0)
+        keep = (jnp.sign(v) == s)
+        mu = jnp.sum(jnp.abs(v) * keep) / jnp.maximum(keep.sum(), 1)
+        # drop the minority-sign entries (their index slot points to 0 weight)
+        idx = jnp.where(keep, idx, n)              # n => scatter-dropped
+        return {"mu": mu * s, "idx": idx.astype(jnp.int32)}
+
+    def decompress(self, payload, n):
+        out = jnp.zeros((n + 1,), jnp.float32)
+        out = out.at[payload["idx"]].set(payload["mu"])
+        return out[:n]
+
+    def wire_bits(self, n):
+        return _k(n, self.fraction) * 32.0 + 32.0
+
+    def entropy_bits(self, n):
+        k = _k(n, self.fraction)
+        idx_bits = math.log2(max(n / k, 2.0)) + 2
+        return k * idx_bits + 32.0
+
+
+class RandMask(Compressor):
+    """CPFed [68]: random-mask sparsifier (unbiased, 1/p rescale) with optional
+    Gaussian noise on survivors (differential privacy)."""
+    biased = False
+
+    def __init__(self, fraction=0.05, dp_sigma=0.0):
+        self.fraction = fraction
+        self.dp_sigma = dp_sigma
+        self.name = f"randmask{fraction:g}"
+
+    def _idx(self, seed_key, n):
+        k = _k(n, self.fraction)
+        # data-independent mask: pseudo-random permutation from a shared seed
+        scores = jax.random.uniform(seed_key, (n,))
+        _, idx = jax.lax.top_k(scores, k)
+        return idx
+
+    def compress(self, rng, x):
+        n = x.shape[0]
+        seed, noise = jax.random.split(rng)
+        idx = self._idx(seed, n)
+        vals = x[idx] / self.fraction
+        if self.dp_sigma:
+            vals = vals + self.dp_sigma * jax.random.normal(noise, vals.shape)
+        return {"vals": vals, "seed": seed}
+
+    def decompress(self, payload, n):
+        idx = self._idx(payload["seed"], n)
+        out = jnp.zeros((n,), jnp.float32)
+        return out.at[idx].set(payload["vals"].astype(jnp.float32))
+
+    def wire_bits(self, n):
+        # indices are regenerated from the 64-bit seed — only values travel
+        return _k(n, self.fraction) * 32.0 + 64.0
+
+
+register("topk")(lambda fraction=0.01, **kw: TopK(fraction))
+register("stc")(lambda fraction=0.01, **kw: STC(fraction))
+register("sbc")(lambda fraction=0.01, **kw: SBC(fraction))
+register("randmask")(lambda fraction=0.05, dp_sigma=0.0, **kw: RandMask(fraction, dp_sigma))

@@ -1,0 +1,2 @@
+from repro.configs.registry import ARCH_IDS, all_archs, get_arch, get_smoke
+from repro.configs.shapes import SHAPES

@@ -1,0 +1,18 @@
+"""paper_lm — the paper-faithful small FL workload (CPU-runnable).
+
+The survey's sources evaluate on small models (CNNs on CIFAR/FEMNIST, small
+LSTMs); our equivalent is a ~1-4M-param transformer LM over the synthetic
+non-iid bigram corpus (repro.data.synthetic). All convergence reproductions
+(benchmarks/) run this config."""
+import jax.numpy as jnp
+from repro.core.types import ArchConfig
+
+CONFIG = ArchConfig(
+    name="paper_lm", family="dense",
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+    d_ff=256, vocab_size=256,
+    block_pattern=("attn+mlp",),
+    dtype=jnp.float32, remat=False, fsdp=False, client_axis="data",
+    citation="[McMahan et al. 2017 scale-equivalent]",
+)
+SMOKE = CONFIG

@@ -1,0 +1,95 @@
+"""The four assigned input shapes + abstract input construction for the
+dry-run (ShapeDtypeStruct stand-ins — weak-type-correct, shardable, no device
+allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import ArchConfig, ShapeConfig
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", seq_len=4_096, global_batch=256,
+                            mode="train"),
+    "prefill_32k": ShapeConfig("prefill_32k", seq_len=32_768, global_batch=32,
+                               mode="prefill"),
+    "decode_32k": ShapeConfig("decode_32k", seq_len=32_768, global_batch=128,
+                              mode="decode"),
+    "long_500k": ShapeConfig("long_500k", seq_len=524_288, global_batch=1,
+                             mode="decode"),
+}
+
+# sliding-window size used to make full-attention archs sub-quadratic for
+# long_500k (DESIGN.md §3: the one shape where window attention substitutes)
+LONG_WINDOW = 8_192
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def model_extras(cfg: ArchConfig, B: int, dtype) -> dict:
+    """Modality-frontend stub inputs (the assignment's one allowed stub)."""
+    out = {}
+    if cfg.family == "vlm":
+        out["patches"] = _sds((B, cfg.num_patches, cfg.d_model), dtype)
+    if cfg.family == "encdec":
+        out["frontend"] = _sds((B, cfg.frontend_tokens, cfg.d_model), dtype)
+    return out
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeConfig, n_clients: int):
+    """Client-major FL batch as ShapeDtypeStructs."""
+    C = max(n_clients, 1)
+    B = shape.global_batch // C
+    assert B >= 1, (shape.name, C)
+    S = shape.seq_len
+    batch = {
+        "tokens": _sds((C, B, S), jnp.int32),
+        "labels": _sds((C, B, S), jnp.int32),
+        "mask": _sds((C, B, S), jnp.float32),
+        "sizes": _sds((C,), jnp.float32),
+        "resources": _sds((C, 4), jnp.float32),
+    }
+    for k, v in model_extras(cfg, B, cfg.dtype).items():
+        batch[k] = _sds((C,) + v.shape, v.dtype)
+    return batch
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    batch.update(model_extras(cfg, B, cfg.dtype))
+    return batch
+
+
+def decode_cache_len(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """KV-cache length for a decode shape. ``long_500k`` on full-attention
+    archs uses the sliding-window ring buffer (bounded cache); SSM/hybrid
+    attn layers keep the full-length cache (their memory is the SSM state /
+    the rare attn layer)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return LONG_WINDOW
+    return shape.seq_len
+
+
+def decode_window(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    if cfg.sliding_window:
+        return cfg.sliding_window
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return LONG_WINDOW
+    return 0
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                       quantized: bool = False):
+    from repro.models.model import init_cache
+    B = shape.global_batch
+    cache_len = decode_cache_len(cfg, shape)
+    enc_len = cfg.frontend_tokens if cfg.family == "encdec" else 0
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, cache_len, enc_len, quantized=quantized))
+    token = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return {"cache": cache, "token": token, "pos": pos}

@@ -1,0 +1,4 @@
+# The paper's primary contribution as a system: federated learning with
+# first-class communication efficiency (algorithms, compression-aware
+# aggregation, client selection, hierarchical sync, byte ledger).
+from repro.core.types import ArchConfig, ShapeConfig, FLConfig, FLState, CommLedger

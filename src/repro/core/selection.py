@@ -1,0 +1,62 @@
+"""Client selection (survey §III.B.2).
+
+Selection is expressed as a per-round weight vector w ∈ R^C (0 for skipped
+clients): under SPMD every client slot computes its local update regardless —
+static shapes — and selection decides whose update (and whose wire bytes)
+count. This matches how production FL simulators (and the sources' own
+analyses) model partial participation.
+
+  * ``all``              — full participation (FedAvg [6] default).
+  * ``random``           — uniform m-of-C sampling (the baseline all selection
+                           papers compare against).
+  * ``power_of_choice``  — Cho et al. [54]: bias toward the highest local
+                           *loss* among a random candidate set of size d.
+  * ``multi_criteria``   — FedMCCS [50]: a composite resource score (CPU,
+                           memory, energy, link quality — simulated device
+                           profiles from the data pipeline) gates eligibility;
+                           top-m eligible clients participate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import FLConfig
+
+
+def _top_m_mask(scores, m):
+    C = scores.shape[0]
+    thresh = jax.lax.top_k(scores, m)[0][-1]
+    mask = scores >= thresh
+    # break ties deterministically so exactly the top-m survive on average
+    return mask.astype(jnp.float32)
+
+
+def select(cfg: FLConfig, rng, *, losses, resources, sizes):
+    """Returns per-client weights (C,) f32.
+
+    losses    : (C,) local first-minibatch loss (power-of-choice signal)
+    resources : (C, R) in [0, 1] simulated device profile (FedMCCS signal)
+    sizes     : (C,) client dataset sizes (FedAvg weighting)
+    """
+    C = sizes.shape[0]
+    m = cfg.clients_per_round or C
+    m = min(m, C)
+
+    if cfg.selection == "all" or m == C:
+        return sizes
+
+    if cfg.selection == "random":
+        mask = _top_m_mask(jax.random.uniform(rng, (C,)), m)
+    elif cfg.selection == "power_of_choice":
+        # candidate set of size d = min(C, 2m), then highest-loss m of them
+        d = min(C, 2 * m)
+        cand = _top_m_mask(jax.random.uniform(rng, (C,)), d)
+        mask = _top_m_mask(jnp.where(cand > 0, losses, -jnp.inf), m)
+    elif cfg.selection == "multi_criteria":
+        score = resources.mean(axis=-1)
+        # FedMCCS: clients whose predicted round time / energy qualify
+        mask = _top_m_mask(score, m)
+    else:
+        raise ValueError(cfg.selection)
+    return mask * sizes

@@ -1,0 +1,261 @@
+"""Core configuration and state dataclasses for the fedcomm framework.
+
+Everything downstream (models, FL algorithms, launcher, dry-run) is driven by
+three configs:
+
+  * :class:`ArchConfig`  — one per assigned architecture (``repro/configs/``).
+  * :class:`ShapeConfig` — one per assigned input shape (``configs/shapes.py``).
+  * :class:`FLConfig`    — the paper's knobs: algorithm, compression, selection,
+                           hierarchy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Architecture
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """A transformer-family architecture, expressive enough for all 10 assigned
+    configs (dense / MoE / SSM / hybrid / enc-dec / VLM)."""
+
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                    # 0 for attention-free archs
+    num_kv_heads: int = 0
+    d_ff: int = 0                     # dense FFN hidden (or per-expert hidden if MoE)
+    vocab_size: int = 32000
+    head_dim: int = 0                 # default: d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0              # 0 => dense FFN
+    experts_per_token: int = 0
+    expert_capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # --- attention details ---
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0           # 0 = full causal; >0 = window size
+    # window applied only for the long-decode variant when the base arch is
+    # full-attention; recorded per-run in the ledger/EXPERIMENTS.
+    long_context_window: int = 8192
+
+    # --- SSM (Mamba-2 / SSD) ---
+    ssm_state: int = 0                # N (state size per head)
+    ssm_expand: int = 2               # d_inner = expand * d_model
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256              # SSD chunk length
+
+    # --- layer pattern (hybrid archs) ---
+    # The model is scan(num_layers // len(block_pattern)) over one "super-block"
+    # whose internal layers follow block_pattern, e.g. Jamba:
+    #   ("mamba","mamba","mamba","attn","mamba","mamba","mamba","mamba")
+    block_pattern: tuple = ("attn",)
+
+    # --- encoder/decoder (audio) ---
+    encoder_layers: int = 0           # >0 => enc-dec; encoder is bidirectional
+    frontend_tokens: int = 0          # stub-frontend sequence length (mel frames /
+                                      # image patches) fed as precomputed embeddings
+
+    # --- VLM ---
+    num_patches: int = 0              # patch-embedding prefix length
+
+    # --- numerics / misc ---
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = False
+    remat: bool = True
+
+    # --- distribution hints (see DESIGN.md §4) ---
+    fsdp: bool = False                # shard params over the data axis too
+                                      # (required for >~70B total params on v5e)
+    client_axis: str = "data"         # "data" (cross-device FL, 16 clients/pod) or
+                                      # "pod"  (cross-silo FL, 1 client per pod)
+
+    citation: str = ""
+
+    def __post_init__(self):
+        if self.num_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_heads and not self.num_kv_heads:
+            object.__setattr__(self, "num_kv_heads", self.num_heads)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return all(b != "attn" for b in self.block_pattern) and not self.encoder_layers
+
+    @property
+    def num_superblocks(self) -> int:
+        assert self.num_layers % len(self.block_pattern) == 0, (
+            f"{self.name}: num_layers={self.num_layers} not divisible by "
+            f"pattern length {len(self.block_pattern)}")
+        return self.num_layers // len(self.block_pattern)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """The smoke-test variant of the same family (2 superblocks, small dims)."""
+        pat = self.block_pattern
+        small = dict(
+            num_layers=2 * len(pat),
+            d_model=min(self.d_model, 256),
+            num_heads=min(self.num_heads, 4) if self.num_heads else 0,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2) if self.experts_per_token else 0,
+            head_dim=0,
+            encoder_layers=min(self.encoder_layers, 2) if self.encoder_layers else 0,
+            frontend_tokens=min(self.frontend_tokens, 16) if self.frontend_tokens else 0,
+            num_patches=min(self.num_patches, 8) if self.num_patches else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else 64,
+            ssm_chunk=16,
+            dtype=jnp.float32,
+            fsdp=False,
+            client_axis="data",
+            remat=False,
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, name=self.name + "-smoke", **small)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                         # "train" | "prefill" | "decode"
+
+    @property
+    def is_decode(self) -> bool:
+        return self.mode == "decode"
+
+
+# ---------------------------------------------------------------------------
+# Federated-learning configuration (the paper's knobs)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    """Every communication-efficiency lever surveyed by the paper, composable."""
+
+    # §III.B.1 local updating
+    algorithm: str = "fedavg"         # fedavg|fedsgd|fedprox|scaffold|feddane
+    local_steps: int = 1              # E; 1 => gradient-compression (FedSGD) mode
+    local_lr: float = 0.05
+    fedprox_mu: float = 0.0           # also FedDANE's proximal mu
+
+    # §III.B.3 reduced updates: CMFL [35] update-relevance filtering — clients
+    # whose delta sign-agrees with the previous global update less than the
+    # threshold do not upload this round (0 = off). Simulation path.
+    cmfl_threshold: float = 0.0
+
+    # §III.B.5 compression
+    uplink_compressor: str = "none"   # none|qsgd8|qsgd4|topk|stc|sbc|sketch|hsq|randmask
+    downlink_compressor: str = "none" # none|lfl8 (LFL: quantized global broadcast)
+    topk_fraction: float = 0.01
+    sketch_rows: int = 5
+    sketch_cols: int = 4096
+    qsgd_block: int = 2048            # per-block scale granularity
+    error_feedback: bool = True       # EF residual for biased compressors
+
+    # §III.B.2 client selection
+    selection: str = "all"            # all | random | power_of_choice | multi_criteria
+    clients_per_round: int = 0        # 0 => all
+    # §III.B.3 reduced updates / hierarchy (FedPAQ periodic avg, Hier-Local-QSGD)
+    hierarchical: bool = False        # edge agg every round, pod agg every sync_every
+    sync_every: int = 4
+    pod_compressor: str = "qsgd8"     # compressor for the cross-pod (cloud) hop
+
+    # beyond-paper perf lever: dtype of the client delta pytree. The paper-
+    # faithful baseline keeps f32 (what the sources' uncompressed FedAvg
+    # sends); bf16 halves both the delta memory and the uncompressed
+    # client-axis collective bytes (§Perf).
+    delta_dtype: str = "f32"          # f32 | bf16
+
+    # server optimizer (beyond-paper: FedOpt family, Reddi et al. 2020)
+    server_opt: str = "fedavg"        # fedavg | fedavgm | fedadam | fedyogi
+    server_lr: float = 1.0
+    server_beta1: float = 0.9
+    server_beta2: float = 0.99
+    server_eps: float = 1e-3
+
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Train / serve state
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FLState:
+    """Server-side state threaded through ``train_step``."""
+    params: PyTree
+    server_opt_state: PyTree
+    control: PyTree | None            # SCAFFOLD global control variate c
+    client_controls: PyTree | None    # SCAFFOLD per-client c_i   (C leading dim)
+    ef_residual: PyTree | None        # error-feedback residuals  (C leading dim)
+    rng: jax.Array
+    round: jax.Array                  # int32 scalar
+    prev_delta: PyTree | None = None  # CMFL relevance reference (last global
+                                      # update); None unless cmfl enabled
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CommLedger:
+    """Per-round communication accounting (the survey's core metric).
+
+    ``*_wire`` counts the bytes our dtype-packed payloads actually occupy;
+    ``*_entropy`` counts the bytes the source papers' entropy coders (Golomb /
+    Elias) would achieve for the same payload (see DESIGN.md §1).
+    All values are float32 scalars so they jit cleanly.
+    """
+    uplink_wire: jax.Array
+    uplink_entropy: jax.Array
+    downlink_wire: jax.Array
+    uplink_dense: jax.Array           # what uncompressed f32 would have cost
+    downlink_dense: jax.Array
+
+    @staticmethod
+    def zero() -> "CommLedger":
+        z = jnp.zeros((), jnp.float32)
+        return CommLedger(z, z, z, z, z)
+
+    def __add__(self, other: "CommLedger") -> "CommLedger":
+        return jax.tree.map(lambda a, b: a + b, self, other)
+
+    def compression_ratio(self) -> jax.Array:
+        total = self.uplink_wire + self.downlink_wire
+        dense = self.uplink_dense + self.downlink_dense
+        return dense / jnp.maximum(total, 1.0)

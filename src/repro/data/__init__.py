@@ -1,0 +1,2 @@
+from repro.data.synthetic import FedDataConfig, sample_round, eval_batch
+from repro.data.pipeline import FederatedLoader

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: count-sketch accumulation (FetchSGD [66]).
+
+GPU FetchSGD scatters x_i into S[j, h_j(i)] with atomics. TPUs have no fast
+scatter unit — the TPU-native adaptation recasts the hash-scatter as a
+**one-hot matmul on the MXU**:
+
+    S[j, :] += (s_j ⊙ x_chunk) @ onehot(h_j(chunk))          (1, C)·(C, cols)
+
+The hash h_j(i) = ((a_j·i + b_j) mod P) mod cols and sign s_j(i) are computed
+in-kernel from ``broadcasted_iota`` over the *global* element index
+(program_id·CHUNK + lane), so only x itself is read from HBM.
+
+Grid is (rows, n/CHUNK); the output block (1, cols) for row j is revisited by
+every chunk step — initialised at chunk 0, accumulated thereafter (standard
+Pallas revisiting-output reduction). TPU grids run minor-most-fastest and
+sequentially per core, so the accumulation is race-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 1024
+
+
+def _kernel(x_ref, a_ref, b_ref, out_ref, *, cols: int):
+    j = pl.program_id(0)          # sketch row
+    c = pl.program_id(1)          # chunk index
+
+    x = x_ref[...]                                   # (CHUNK,)
+    idx = (jnp.uint32(c * CHUNK)
+           + jax.lax.broadcasted_iota(jnp.uint32, (CHUNK,), 0))
+    ab = a_ref[0] * idx + b_ref[0]                   # uint32 wraparound hash
+    h = (ab % jnp.uint32(cols)).astype(jnp.int32)    # (CHUNK,)
+    s = jnp.where((ab // jnp.uint32(cols)) % 2 == 0, 1.0, -1.0).astype(jnp.float32)
+
+    onehot = (h[:, None] == jax.lax.broadcasted_iota(jnp.int32, (CHUNK, cols), 1))
+    partial = jnp.dot((s * x)[None, :], onehot.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)      # (1, cols)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "cols", "interpret"))
+def count_sketch(x, a, b, rows: int, cols: int, interpret=False):
+    """x (n,) f32 with n % CHUNK == 0; a, b (rows,) int32 hash params.
+    Returns S (rows, cols) f32."""
+    n = x.shape[0]
+    assert n % CHUNK == 0, (n, CHUNK)
+    grid = (rows, n // CHUNK)
+    return pl.pallas_call(
+        functools.partial(_kernel, cols=cols),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((CHUNK,), lambda j, c: (c,)),
+            pl.BlockSpec((1,), lambda j, c: (j,)),
+            pl.BlockSpec((1,), lambda j, c: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, cols), lambda j, c: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(x, a, b)

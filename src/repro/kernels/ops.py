@@ -1,0 +1,81 @@
+"""Public jit'd wrappers over the Pallas compression kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs through JAX's interpreter, proving the Pallas logic without
+TPU hardware. On a real TPU backend the same calls lower to Mosaic.
+
+Each wrapper handles the flat-vector <-> blocked layout plumbing so callers
+(the compressors in ``repro.compress``) see the same flat-f32 interface as
+the pure-JAX paths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import count_sketch as _cs
+from repro.kernels import qsgd as _qsgd
+from repro.kernels import ternary as _tern
+from repro.kernels import topk_mask as _topk
+
+ROWS = _qsgd.ROWS
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_blocked(x, block):
+    n = x.shape[0]
+    nb = -(-n // block)
+    nb = -(-nb // ROWS) * ROWS          # grid rows multiple of ROWS
+    pad = nb * block - n
+    return jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(nb, block), pad
+
+
+def qsgd_quantize(x, u, bits=8, block=2048):
+    """Flat f32 (n,) + uniforms (n,) -> (q int8 (nb,block), scale f32 (nb,))."""
+    xb, pad = _to_blocked(x, block)
+    ub, _ = _to_blocked(u, block)
+    q, scale = _qsgd.qsgd_quantize_blocked(xb, ub, bits=bits,
+                                           interpret=_interpret())
+    return q, scale
+
+
+def stc_ternarize(x, fraction=0.01, block=2048):
+    """Full STC compress: top-k threshold + fused ternarise pass.
+    Returns (code int8 flat (n,), mu f32 scalar)."""
+    n = x.shape[0]
+    k = max(1, int(round(n * fraction)))
+    thresh = jax.lax.top_k(jnp.abs(x), k)[0][-1]
+    xb, pad = _to_blocked(x, block)
+    code, psum, pcnt = _tern.ternarize_blocked(xb, thresh,
+                                               interpret=_interpret())
+    mu = psum.sum() / jnp.maximum(pcnt.sum(), 1.0)
+    return code.reshape(-1)[:n], mu
+
+
+def threshold_sparsify(x, thresh, block=2048):
+    """Fused (kept, error-feedback residual) in one pass. Flat f32 in/out."""
+    n = x.shape[0]
+    xb, pad = _to_blocked(x, block)
+    kept, resid = _topk.threshold_sparsify_blocked(xb, thresh,
+                                                   interpret=_interpret())
+    return kept.reshape(-1)[:n], resid.reshape(-1)[:n]
+
+
+def sketch(x, rows=5, cols=4096, seed=17):
+    """Count-sketch via the one-hot-MXU kernel. Flat f32 (n,) -> (rows, cols)."""
+    from repro.compress.sketch import hash_params
+    n = x.shape[0]
+    pad = (-n) % _cs.CHUNK
+    xp = jnp.pad(x.astype(jnp.float32), (0, pad))
+    a, b = hash_params(rows, seed)
+    S = _cs.count_sketch(xp, a, b, rows, cols, interpret=_interpret())
+    if pad:
+        # remove the padded elements' (zero-valued) contributions: zeros add
+        # nothing, so S is already exact.
+        pass
+    return S

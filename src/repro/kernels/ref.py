@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``ref_*`` takes exactly the same inputs as its kernel counterpart and
+must match it to float tolerance; the test suite sweeps shapes and dtypes
+asserting ``assert_allclose(kernel(...), ref(...))`` with ``interpret=True``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+def ref_qsgd_quantize_blocked(xb, u, bits=8):
+    levels = 2 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    y = xb / jnp.maximum(scale, 1e-30) * levels
+    q = jnp.floor(y + u).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def ref_ternarize_blocked(xb, thresh):
+    mag = jnp.abs(xb)
+    keep = mag >= thresh
+    code = (jnp.sign(xb) * keep).astype(jnp.int8)
+    psum = jnp.sum(jnp.where(keep, mag, 0.0), axis=1)
+    pcnt = keep.sum(axis=1).astype(jnp.float32)
+    return code, psum, pcnt
+
+
+def ref_threshold_sparsify_blocked(xb, thresh):
+    keep = jnp.abs(xb) >= thresh
+    kept = jnp.where(keep, xb, 0.0)
+    return kept, xb - kept
+
+
+def ref_count_sketch(x, a, b, rows, cols):
+    from repro.compress.sketch import bucket_and_sign
+    n = x.shape[0]
+    h, s = bucket_and_sign(jnp.arange(n), a, b, cols)
+    sx = s * x.astype(jnp.float32)[None, :]
+    return jax.vmap(lambda hv, v: jnp.zeros(cols, jnp.float32).at[hv].add(v))(h, sx)

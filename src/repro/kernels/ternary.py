@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: STC ternarisation (threshold -> {−mu, 0, +mu} partials).
+
+Given the global top-k magnitude threshold t (computed once outside with
+``lax.top_k``), one fused HBM pass emits per-tile ternary codes plus the
+partial sums needed for mu = mean(|x| over the support):
+
+    code  = sign(x) * (|x| >= t)          int8
+    psum  = Σ_tile |x| · (|x| >= t)       f32 per grid row
+    pcnt  = Σ_tile (|x| >= t)             f32 per grid row
+
+The caller finalises mu = Σpsum / Σpcnt (a tiny reduction) — so the whole STC
+compress is 1 top-k + 1 fused pass instead of 3 elementwise passes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 8
+
+
+def _kernel(x_ref, t_ref, code_ref, psum_ref, pcnt_ref):
+    x = x_ref[...]                                   # (ROWS, block)
+    t = t_ref[0]
+    mag = jnp.abs(x)
+    keep = mag >= t
+    code_ref[...] = (jnp.sign(x) * keep).astype(jnp.int8)
+    psum_ref[...] = jnp.sum(jnp.where(keep, mag, 0.0), axis=1)
+    pcnt_ref[...] = jnp.sum(keep.astype(jnp.float32), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ternarize_blocked(xb, thresh, interpret=False):
+    """xb (nb, block) f32, thresh () f32 ->
+    (code int8 (nb, block), psum f32 (nb,), pcnt f32 (nb,))."""
+    nb, block = xb.shape
+    assert nb % ROWS == 0
+    grid = (nb // ROWS,)
+    t = jnp.reshape(thresh.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb, t)

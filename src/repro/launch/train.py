@@ -1,0 +1,115 @@
+"""Federated training CLI — the deployment path (clients on mesh axes).
+
+    PYTHONPATH=src python -m repro.launch.train --arch paper_lm \
+        --rounds 20 --compressor qsgd8 [--hierarchical] [--devices 8]
+
+On real TPU hardware omit --devices (uses the actual topology). On CPU,
+--devices N simulates an N-device host for the mesh (set before jax init).
+"""
+import argparse
+import os
+import sys
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper_lm")
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--algorithm", default="fedavg")
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--local-lr", type=float, default=0.2)
+    ap.add_argument("--compressor", default="none")
+    ap.add_argument("--downlink", default="none")
+    ap.add_argument("--selection", default="all")
+    ap.add_argument("--clients-per-round", type=int, default=0)
+    ap.add_argument("--server-opt", default="fedavg")
+    ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--sync-every", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=48)
+    ap.add_argument("--batch-per-client", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (CPU dry runs)")
+    ap.add_argument("--model-parallel", type=int, default=2)
+    ap.add_argument("--checkpoint", default="")
+    return ap.parse_args()
+
+
+def main():
+    args = _parse()
+    if args.devices:
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+    from repro import checkpoint
+    from repro.configs.registry import get_arch
+    from repro.core.federated import make_fl_train_step
+    from repro.core.hierarchical import make_hier_fl_train_step
+    from repro.core.types import FLConfig
+    from repro.data.synthetic import FedDataConfig, eval_batch, sample_round
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import Model, set_activation_mesh
+
+    cfg = get_arch(args.arch)
+    model = Model(cfg)
+    fl = FLConfig(algorithm=args.algorithm, local_steps=args.local_steps,
+                  local_lr=args.local_lr, uplink_compressor=args.compressor,
+                  downlink_compressor=args.downlink, selection=args.selection,
+                  clients_per_round=args.clients_per_round,
+                  server_opt=args.server_opt, hierarchical=args.hierarchical,
+                  sync_every=args.sync_every)
+
+    n = jax.device_count()
+    mp = min(args.model_parallel, n)
+    if args.hierarchical:
+        mesh = make_host_mesh(model=mp, pod=2, data=n // (2 * mp))
+    else:
+        mesh = make_host_mesh(model=mp)
+    set_activation_mesh(mesh)
+    print(f"mesh={dict(mesh.shape)} arch={cfg.name} "
+          f"params={model.param_count():,}")
+
+    if args.hierarchical:
+        step = make_hier_fl_train_step(model, fl, mesh, chunk=args.seq)
+        state = step.init_fn(jax.random.PRNGKey(0))
+        G, Ce = step.n_pods, step.clients_per_pod
+        C = G * Ce
+        se, sc = jax.jit(step.step_edge), jax.jit(step.step_cloud)
+    else:
+        step = make_fl_train_step(model, fl, mesh, chunk=args.seq)
+        state = step.init_fn(jax.random.PRNGKey(0))
+        C = step.n_clients
+        jstep = jax.jit(step.step_fn)
+
+    data = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=C,
+                         seq_len=args.seq,
+                         batch_per_client=args.batch_per_client,
+                         heterogeneity=1.5)
+    ev = eval_batch(data, jax.random.PRNGKey(99), batch_size=4)
+    evl = jax.jit(lambda p: model.loss(p, ev, chunk=args.seq)[0])
+
+    for r in range(args.rounds):
+        b = sample_round(data, jax.random.fold_in(jax.random.PRNGKey(1), r))
+        if args.hierarchical:
+            batch = {k: v.reshape((G, Ce) + v.shape[1:]) for k, v in b.items()
+                     if k in ("tokens", "labels", "mask")}
+            cloud = (r + 1) % args.sync_every == 0
+            state, m = (sc if cloud else se)(state, batch)
+            params = jax.tree.map(lambda x: x[0], state[0])
+        else:
+            state, m = jstep(state, b)
+            params = state.params
+        led = m["ledger"]
+        print(f"round {r:>3} loss={float(m['loss']):.3f} "
+              f"eval={float(evl(params)):.3f} "
+              f"up={float(led.uplink_wire)/1e6:.2f}MB "
+              f"ratio={float(led.compression_ratio()):.1f}x", flush=True)
+    if args.checkpoint:
+        checkpoint.save(args.checkpoint, params)
+        print("saved", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

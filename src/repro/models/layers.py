@@ -1,0 +1,381 @@
+"""Layer primitives shared by every assigned architecture.
+
+Conventions:
+  x       : (B, S, D)   activations
+  q       : (B, S, H, hd)
+  k, v    : (B, S, KV, hd)        GQA group size G = H // KV
+  caches  : dict per block; attention: {"k","v"} (+ ring-buffer "slot_pos"),
+            mamba: {"state","conv"}; cross-attn: {"ek","ev"}.
+
+Parameters are declared via :class:`ParamDef` (shape, logical axes, init) so
+that sharding rules (``sharding.py``) and initialisation derive from one
+source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# Parameter declaration / init
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    logical: tuple
+    init: str = "normal"      # normal | zeros | ones | small | alog
+    scale: float = 0.02
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, rng, dtype):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    rngs = jax.random.split(rng, len(leaves))
+
+    def one(d: ParamDef, r):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        if d.init == "alog":   # mamba A_log: log of Uniform[1,16]
+            u = jax.random.uniform(r, d.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(dtype)
+        scale = d.scale if d.init == "normal" else d.scale * 0.1
+        return (jax.random.normal(r, d.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(d, r) for d, r in zip(leaves, rngs)])
+
+
+def logical_tree(defs):
+    return jax.tree.map(lambda d: d.logical, defs, is_leaf=is_def)
+
+
+# ---------------------------------------------------------------------------
+# Norms / rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * inv).astype(x.dtype) * w
+
+
+def rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: (S,) or broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs          # (..., S, half)
+    ang = ang[..., None, :]                                         # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ArchConfig, cross: bool = False):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    d = {
+        "wq": ParamDef((D, H * hd), ("embed", "heads")),
+        "wk": ParamDef((D, KV * hd), ("embed", "kv_heads")),
+        "wv": ParamDef((D, KV * hd), ("embed", "kv_heads")),
+        "wo": ParamDef((H * hd, D), ("heads", "embed")),
+        "ln": ParamDef((D,), ("norm",), "ones"),
+    }
+    if cfg.qkv_bias and not cross:
+        d["bq"] = ParamDef((H * hd,), ("heads",), "zeros")
+        d["bk"] = ParamDef((KV * hd,), ("kv_heads",), "zeros")
+        d["bv"] = ParamDef((KV * hd,), ("kv_heads",), "zeros")
+    return d
+
+
+def _qkv(p, x, cfg: ArchConfig, positions, use_rope=True):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q * (hd ** -0.5), k, v
+
+
+def chunked_attention(q, k, v, *, q_positions, k_positions, causal=True,
+                      window=0, chunk=512, chunk_q=512):
+    """Flash-style online-softmax attention, doubly tiled: an outer scan over
+    query chunks, an inner scan over KV chunks. Peak score temp is
+    (B, KV, G, chunk_q, chunk) — bounded regardless of sequence length, which
+    is what lets the 32k-prefill and 500k-window shapes lower within VMEM/HBM
+    budgets. Handles GQA grouping, causal masks and sliding windows.
+    Accumulators are f32; output is cast back to q.dtype per query chunk.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    chunk_q = min(chunk_q, Sq)
+    if Sk % chunk:                      # pad KV to a chunk multiple; padded
+        pad = chunk - Sk % chunk        # slots get position -1 => masked out
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad), constant_values=-1)
+        Sk += pad
+    qpad = (-Sq) % chunk_q
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, qpad), constant_values=-1)
+    nq = (Sq + qpad) // chunk_q
+    nk = Sk // chunk
+    qg = q.reshape(B, nq, chunk_q, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    qp = q_positions.reshape(nq, chunk_q)
+
+    def q_body(_, qin):
+        qc, qpos = qin                                # (B,KV,G,cq,hd), (cq,)
+
+        def kv_body(carry, i):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(k_positions, i * chunk, chunk,
+                                              axis=0)
+            s = jnp.einsum("bkgqd,bckd->bkgqc", qc, kc,
+                           preferred_element_type=jnp.float32)
+            mask = jnp.broadcast_to(kp[None, :] >= 0, (chunk_q, chunk))
+            if causal:
+                mask &= kp[None, :] <= qpos[:, None]
+            if window:
+                mask &= kp[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p, vc.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, chunk_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, chunk_q), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, chunk_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)              # (B,KV,G,cq,hd)
+
+    _, outs = jax.lax.scan(q_body, None, (qg, qp))    # (nq,B,KV,G,cq,hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq + qpad, H * hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attention_block(p, x, cfg: ArchConfig, positions, *, window=0, causal=True,
+                    chunk=512, return_kv=False):
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _qkv(p, h, cfg, positions)
+    out = chunked_attention(q, k, v, q_positions=positions, k_positions=positions,
+                            causal=causal, window=window, chunk=chunk)
+    out = out @ p["wo"]
+    if return_kv:
+        return x + out, (k, v)
+    return x + out
+
+
+# --- decode (single token, KV cache; optionally a ring buffer) --------------
+
+def attn_cache_defs(cfg: ArchConfig, batch, cache_len, quantized=False):
+    """quantized=True stores the KV cache as int8 with per-(token, head)
+    scales — the paper's quantization idea applied to the *serving* memory
+    wall (decode is HBM-bound on reading the cache; int8 halves that term
+    vs bf16). See EXPERIMENTS.md §Perf B2."""
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    d = {
+        "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+    if quantized:
+        d["k"] = jnp.zeros((batch, cache_len, KV, hd), jnp.int8)
+        d["v"] = jnp.zeros((batch, cache_len, KV, hd), jnp.int8)
+        d["kscale"] = jnp.zeros((batch, cache_len, KV, 1), jnp.float32)
+        d["vscale"] = jnp.zeros((batch, cache_len, KV, 1), jnp.float32)
+    else:
+        d["k"] = jnp.zeros((batch, cache_len, KV, hd), cfg.dtype)
+        d["v"] = jnp.zeros((batch, cache_len, KV, hd), cfg.dtype)
+    return d
+
+
+def _quantize_kv(x):
+    """x (B,1,KV,hd) -> (int8, scale (B,1,KV,1))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    q = jnp.round(x.astype(jnp.float32) / jnp.maximum(scale, 1e-30) * 127.0)
+    return q.astype(jnp.int8), scale
+
+
+def attention_decode(p, x, cfg: ArchConfig, cache, pos, *, window=0,
+                     use_rope=True):
+    """x: (B, 1, D); pos: () int32 — aligned batched decode."""
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _qkv(p, h, cfg, pos[None].astype(jnp.int32), use_rope=use_rope)
+    W = cache["k"].shape[1]
+    slot = jnp.mod(pos, W)
+    quantized = "kscale" in cache
+    new_cache = {}
+    if quantized:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1)
+        cks = jax.lax.dynamic_update_slice_in_dim(cache["kscale"], ks, slot,
+                                                  axis=1)
+        cvs = jax.lax.dynamic_update_slice_in_dim(cache["vscale"], vs, slot,
+                                                  axis=1)
+        kd = ck.astype(jnp.float32) * (cks / 127.0)
+        vd = cv.astype(jnp.float32) * (cvs / 127.0)
+        new_cache.update(kscale=cks, vscale=cvs)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        kd, vd = ck, cv
+    spos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], pos[None].astype(jnp.int32), slot, axis=0)
+    qg = q.reshape(B, 1, KV, H // KV, hd)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kd,
+                   preferred_element_type=jnp.float32)
+    valid = (spos >= 0) & (spos <= pos)
+    if window:
+        valid &= spos > pos - window
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckd->bkgqd", w, vd.astype(jnp.float32))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H * hd).astype(x.dtype)
+    new_cache.update(k=ck, v=cv, slot_pos=spos)
+    return x + out @ p["wo"], new_cache
+
+
+# --- cross attention (whisper decoder) ---------------------------------------
+
+def cross_attn_defs(cfg: ArchConfig):
+    return attn_defs(cfg, cross=True)
+
+
+def cross_attention(p, x, enc_kv, cfg: ArchConfig):
+    """enc_kv: precomputed (ek, ev) each (B, T, KV, hd)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, H, hd) * (hd ** -0.5)
+    ek, ev = enc_kv
+    qg = q.reshape(B, S, KV, H // KV, hd)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg, ek, preferred_element_type=jnp.float32)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckd->bkgqd", w, ev.astype(jnp.float32))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H * hd).astype(x.dtype)
+    return x + out @ p["wo"]
+
+
+def encode_cross_kv(p, enc_out, cfg: ArchConfig):
+    B, T, _ = enc_out.shape
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    ek = (enc_out @ p["wk"]).reshape(B, T, KV, hd)
+    ev = (enc_out @ p["wv"]).reshape(B, T, KV, hd)
+    return ek, ev
+
+
+# ---------------------------------------------------------------------------
+# FFN: gated (llama/qwen) and plain (whisper)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ArchConfig, gated=True):
+    D, F = cfg.d_model, cfg.d_ff
+    d = {"ln": ParamDef((D,), ("norm",), "ones"),
+         "w_up": ParamDef((D, F), ("embed", "ffn")),
+         "w_down": ParamDef((F, D), ("ffn", "embed"))}
+    if gated:
+        d["w_gate"] = ParamDef((D, F), ("embed", "ffn"))
+    return d
+
+
+def mlp_block(p, x, cfg: ArchConfig):
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    up = h @ p["w_up"]
+    if "w_gate" in p:
+        up = jax.nn.silu(h @ p["w_gate"]) * up
+    else:
+        up = jax.nn.gelu(up)
+    return x + up @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE (capacity-based dispatch; experts sharded over the model axis)
+# ---------------------------------------------------------------------------
+
+def moe_defs(cfg: ArchConfig):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "ln": ParamDef((D,), ("norm",), "ones"),
+        "router": ParamDef((D, E), ("embed", None)),
+        "w_gate": ParamDef((E, D, F), ("experts", "embed", "ffn")),
+        "w_up": ParamDef((E, D, F), ("experts", "embed", "ffn")),
+        "w_down": ParamDef((E, F, D), ("experts", "ffn", "embed")),
+    }
+
+
+def moe_block(p, x, cfg: ArchConfig):
+    """Top-k routing with per-expert capacity; returns (y, aux_loss)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    logits = (h @ p["router"]).astype(jnp.float32)              # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)               # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(cfg.expert_capacity_factor * S * K / E))
+    sel = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)        # (B,S,K,E)
+    combine = (sel * gate_vals[..., None]).sum(2)               # (B,S,E)
+    # position of each token within its expert queue
+    pos_in_e = jnp.cumsum(sel.sum(2), axis=1) - sel.sum(2)      # (B,S,E)
+    keep = pos_in_e < cap
+    combine = combine * keep
+    disp = jax.nn.one_hot(pos_in_e.astype(jnp.int32), cap, dtype=x.dtype) \
+        * (combine > 0)[..., None].astype(x.dtype)              # (B,S,E,C)
+
+    xe = jnp.einsum("bsec,bsd->becd", disp, h)                  # (B,E,C,D)
+    a = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    y = jnp.einsum("becf,efd->becd", jax.nn.silu(a) * u, p["w_down"])
+    out = jnp.einsum("bsec,becd->bsd", disp * combine[..., None].astype(x.dtype), y)
+
+    # load-balance aux loss (Switch-style)
+    frac_tokens = (sel.sum(2) > 0).astype(jnp.float32).mean((0, 1))   # (E,)
+    frac_prob = probs.mean((0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_prob)
+    return x + out, aux
+
+
+def block_aux_zero():
+    return jnp.zeros((), jnp.float32)

@@ -1,0 +1,386 @@
+"""Model facade: one scan-over-layers decoder (optionally + encoder) that
+expresses all 10 assigned architectures via ``ArchConfig.block_pattern``.
+
+Pattern entries are ``"<mixer>[+cross][+<ffn>]"`` with mixer in
+{``attn``, ``mamba``} and ffn in {``mlp``, ``moe``}, e.g.:
+
+  dense llama/qwen  : ("attn+mlp",)
+  MoE               : ("attn+moe",)
+  Mamba-2           : ("mamba",)
+  Jamba             : ("mamba+mlp","mamba+moe","mamba+mlp","attn+moe",
+                       "mamba+mlp","mamba+moe","mamba+mlp","mamba+moe")
+  Whisper decoder   : ("attn+cross+mlp",)
+
+The layer stack is ``lax.scan`` over ``num_superblocks`` stacked parameter
+trees (one superblock = one repetition of the pattern), with optional
+``jax.checkpoint`` remat — this keeps the 95-layer full-size configs' HLO
+compact enough to compile quickly on the dry-run host.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as M
+from repro.models.layers import ParamDef
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Activation (sequence-parallel) sharding
+#
+# Within one FL client the model is tensor-parallel over the ``model`` axis;
+# without further constraints the residual stream (B, S, D) would replicate
+# across the client's TP group — 40+ GB/chip for the 32B+ configs. Constraining
+# the *sequence* dim to the model axis at superblock boundaries (Megatron-style
+# sequence parallelism; GSPMD inserts the all-gather/reduce-scatter pair)
+# bounds saved activations at S/|model| per chip. Batch dims stay
+# UNCONSTRAINED so pod-client configs keep their data-axis batch sharding.
+# ---------------------------------------------------------------------------
+
+_ACT_MESH = None
+
+
+def set_activation_mesh(mesh):
+    """Launcher hook: enable sequence-parallel activation constraints."""
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def _constrain_seq(x):
+    if _ACT_MESH is None or "model" not in _ACT_MESH.axis_names or x.ndim != 3:
+        return x
+    m = dict(_ACT_MESH.shape)["model"]
+    if x.shape[1] < m or x.shape[1] % m:
+        return x
+    U = jax.sharding.PartitionSpec.UNCONSTRAINED
+    spec = jax.sharding.PartitionSpec(U, "model", U)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(_ACT_MESH, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def _block_defs(cfg: ArchConfig, entry: str):
+    parts = entry.split("+")
+    d: dict = {}
+    if parts[0] == "attn":
+        d["mixer"] = L.attn_defs(cfg)
+    elif parts[0] == "mamba":
+        d["mixer"] = M.mamba_defs(cfg)
+    else:
+        raise ValueError(entry)
+    if "cross" in parts:
+        d["cross"] = L.cross_attn_defs(cfg)
+    if "moe" in parts:
+        d["ffn"] = L.moe_defs(cfg)
+    elif "mlp" in parts:
+        d["ffn"] = L.mlp_defs(cfg, gated=cfg.family != "encdec")
+    return d
+
+
+def _stack_defs(defs, n):
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("stack",) + d.logical, d.init, d.scale),
+        defs, is_leaf=L.is_def)
+
+
+def param_defs(cfg: ArchConfig) -> PyTree:
+    D, V = cfg.d_model, cfg.vocab_size
+    sb = {f"b{i}": _block_defs(cfg, e) for i, e in enumerate(cfg.block_pattern)}
+    defs = {
+        "embed": ParamDef((V, D), ("vocab", "embed")),
+        "final_ln": ParamDef((D,), ("norm",), "ones"),
+        "layers": _stack_defs(sb, cfg.num_superblocks),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((D, V), ("embed", "vocab"))
+    if cfg.encoder_layers:
+        enc_block = {"mixer": L.attn_defs(cfg),
+                     "ffn": L.mlp_defs(cfg, gated=False)}
+        defs["encoder"] = {
+            "layers": _stack_defs(enc_block, cfg.encoder_layers),
+            "final_ln": ParamDef((D,), ("norm",), "ones"),
+        }
+    if cfg.num_patches:
+        # lightweight projector for the (stubbed) vision embeddings
+        defs["patch_proj"] = ParamDef((D, D), ("embed", "embed"))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _sinusoid(S, D):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * dim / D))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _superblock(psb, x, cfg: ArchConfig, positions, enc_out, *, causal=True,
+                window=0, chunk=512):
+    use_rope = cfg.family != "encdec"
+    aux = jnp.zeros((), jnp.float32)
+    for i, entry in enumerate(cfg.block_pattern):
+        parts = entry.split("+")
+        p = psb[f"b{i}"]
+        if parts[0] == "attn":
+            h = L.rmsnorm(x, p["mixer"]["ln"], cfg.norm_eps)
+            q, k, v = L._qkv(p["mixer"], h, cfg, positions, use_rope=use_rope)
+            o = L.chunked_attention(q, k, v, q_positions=positions,
+                                    k_positions=positions, causal=causal,
+                                    window=window, chunk=chunk)
+            x = x + o @ p["mixer"]["wo"]
+        else:
+            x = M.mamba_block(p["mixer"], x, cfg)
+        if "cross" in parts:
+            ekv = L.encode_cross_kv(p["cross"], enc_out, cfg)
+            x = L.cross_attention(p["cross"], x, ekv, cfg)
+        if "ffn" in p:
+            if "router" in p["ffn"]:
+                x, a = L.moe_block(p["ffn"], x, cfg)
+                aux = aux + a
+            else:
+                x = L.mlp_block(p["ffn"], x, cfg)
+    return x, aux
+
+
+def _run_stack(params_layers, x, cfg, positions, enc_out, *, causal=True,
+               window=0, chunk=512):
+    def body(carry, psb):
+        carry = _constrain_seq(carry)
+        y, aux = _superblock(psb, carry, cfg, positions, enc_out,
+                             causal=causal, window=window, chunk=chunk)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, params_layers)
+    return x, auxs.sum()
+
+
+def _encode(params, frontend, cfg: ArchConfig):
+    """Whisper-style encoder over stubbed frame embeddings (B, T, D)."""
+    T, D = frontend.shape[1], cfg.d_model
+    x = frontend + _sinusoid(T, D).astype(frontend.dtype)
+    pos = jnp.arange(T)
+    enc = params["encoder"]
+
+    def body(carry, psb):
+        h = L.rmsnorm(carry, psb["mixer"]["ln"], cfg.norm_eps)
+        q, k, v = L._qkv(psb["mixer"], h, cfg, pos, use_rope=False)
+        o = L.chunked_attention(q, k, v, q_positions=pos, k_positions=pos,
+                                causal=False, chunk=512)
+        h2 = carry + o @ psb["mixer"]["wo"]
+        h2 = L.mlp_block(psb["ffn"], h2, cfg)
+        return h2, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return L.rmsnorm(x, enc["final_ln"], cfg.norm_eps)
+
+
+def _inputs_to_x(params, batch, cfg: ArchConfig):
+    """Embed tokens, handling modality prefixes. Returns (x, positions,
+    enc_out, text_offset)."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    enc_out = None
+    offset = 0
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+        offset = patches.shape[1]
+    if cfg.family == "encdec":
+        enc_out = _encode(params, batch["frontend"].astype(x.dtype), cfg)
+        x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(x.shape[1])
+    return x, positions, enc_out, offset
+
+
+def forward(params, batch, cfg: ArchConfig, *, window=None, chunk=512):
+    """Full-sequence forward -> final hidden states (B, S_text, D)."""
+    x, positions, enc_out, offset = _inputs_to_x(params, batch, cfg)
+    w = cfg.sliding_window if window is None else window
+    x, aux = _run_stack(params["layers"], x, cfg, positions, enc_out,
+                        causal=True, window=w, chunk=chunk)
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    if offset:
+        x = x[:, offset:]
+    return x, aux
+
+
+def unembed(params, x, cfg: ArchConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ w
+
+
+def chunked_xent(x, w, labels, mask, chunk=512):
+    """Cross-entropy without materialising (B, S, V): scan + remat over
+    sequence chunks. Returns (sum_loss, sum_mask)."""
+    B, S, D = x.shape
+    c = min(chunk, S)
+    if S % c:                       # pad to a chunk multiple; padded tokens
+        pad = c - S % c             # carry mask 0 and contribute nothing
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        S += pad
+    n = S // c
+    xs = x.reshape(B, n, c, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, c).transpose(1, 0, 2)
+    ms = mask.reshape(B, n, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xc, lc, mc = inp
+        logits = (xc @ w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        tot, cnt = carry
+        return (tot + ((lse - gold) * mc).sum(), cnt + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ls, ms))
+    return tot, cnt
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, chunk=512):
+    """Next-token LM loss. batch: tokens (B,S), labels (B,S), mask (B,S)
+    [+ patches / frontend for vlm / encdec]."""
+    x, aux = forward(params, batch, cfg, chunk=chunk)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    tot, cnt = chunked_xent(x, w, batch["labels"], batch["mask"].astype(jnp.float32),
+                            chunk=chunk)
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + cfg.router_aux_weight * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, enc_len: int = 0,
+               quantized: bool = False):
+    """Zero cache pytree; leaves stacked over superblocks (leading nsb dim).
+    ``quantized`` stores attention KV as int8 + per-(token, head) scales."""
+    def one_block(entry):
+        parts = entry.split("+")
+        d: dict = {}
+        if parts[0] == "attn":
+            d["kv"] = L.attn_cache_defs(cfg, batch, cache_len,
+                                        quantized=quantized)
+        else:
+            d["kv"] = M.mamba_cache_defs(cfg, batch)
+        if "cross" in parts:
+            KV, hd = cfg.num_kv_heads, cfg.head_dim
+            d["enc"] = {"ek": jnp.zeros((batch, enc_len, KV, hd), cfg.dtype),
+                        "ev": jnp.zeros((batch, enc_len, KV, hd), cfg.dtype)}
+        return d
+
+    sb = {f"b{i}": one_block(e) for i, e in enumerate(cfg.block_pattern)}
+    n = cfg.num_superblocks
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), sb)
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig, *, window=0):
+    """One decode step. token (B,1) int32, pos () int32. Returns
+    (logits (B,1,V), new_cache)."""
+    x = jnp.take(params["embed"], token, axis=0)
+    if cfg.family == "encdec":
+        x = x + _sinusoid_at(pos, cfg.d_model).astype(x.dtype)
+
+    def body(x, scanned):
+        psb, csb = scanned
+        new_csb = {}
+        for i, entry in enumerate(cfg.block_pattern):
+            parts = entry.split("+")
+            p, c = psb[f"b{i}"], csb[f"b{i}"]
+            nc = {}
+            if parts[0] == "attn":
+                x, nc["kv"] = L.attention_decode(
+                    p["mixer"], x, cfg, c["kv"], pos, window=window,
+                    use_rope=cfg.family != "encdec")
+            else:
+                x, nc["kv"] = M.mamba_decode(p["mixer"], x, cfg, c["kv"])
+            if "cross" in parts:
+                x = L.cross_attention(p["cross"], x,
+                                      (c["enc"]["ek"], c["enc"]["ev"]), cfg)
+                nc["enc"] = c["enc"]
+            if "ffn" in p:
+                if "router" in p["ffn"]:
+                    x, _ = L.moe_block(p["ffn"], x, cfg)
+                else:
+                    x = L.mlp_block(p["ffn"], x, cfg)
+            new_csb[f"b{i}"] = nc
+        return x, new_csb
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits, new_cache
+
+
+def _sinusoid_at(pos, D):
+    dim = jnp.arange(D // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10_000.0 ** (2 * dim / D))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+
+
+def prefill(params, batch, cfg: ArchConfig, *, window=0, chunk=512):
+    """Full-sequence prefill returning last-position logits (the KV caches for
+    the dry-run's decode shapes enter via ``init_cache`` ShapeDtypeStructs, so
+    prefill here only needs to prove the full-context forward lowers)."""
+    x, aux = forward(params, batch, cfg, window=window, chunk=chunk)
+    logits = unembed(params, x[:, -1:], cfg)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.defs = param_defs(cfg)
+
+    def init(self, rng) -> PyTree:
+        return L.init_params(self.defs, rng, self.cfg.dtype)
+
+    def logical_axes(self) -> PyTree:
+        return L.logical_tree(self.defs)
+
+    def abstract_params(self) -> PyTree:
+        return jax.tree.map(
+            lambda d: jax.ShapeDtypeStruct(d.shape, self.cfg.dtype),
+            self.defs, is_leaf=L.is_def)
+
+    def loss(self, params, batch, chunk=512):
+        return loss_fn(params, batch, self.cfg, chunk=chunk)
+
+    def prefill(self, params, batch, window=0, chunk=512):
+        return prefill(params, batch, self.cfg, window=window, chunk=chunk)
+
+    def decode(self, params, cache, token, pos, window=0):
+        return decode_step(params, cache, token, pos, self.cfg, window=window)
+
+    def init_cache(self, batch, cache_len, enc_len=0, quantized=False):
+        return init_cache(self.cfg, batch, cache_len, enc_len,
+                          quantized=quantized)
+
+    def param_count(self) -> int:
+        import numpy as np
+        return int(sum(np.prod(d.shape) for d in
+                       jax.tree.leaves(self.defs, is_leaf=L.is_def)))

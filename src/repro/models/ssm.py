@@ -1,0 +1,171 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+TPU adaptation: the SSD *chunked* formulation is used — intra-chunk terms are
+dense (L×L) matmuls that map onto the MXU, and the inter-chunk recurrence is a
+short ``lax.scan`` over S/L steps.  This is the TPU-native form of the paper's
+"dual" algorithm (no sequential per-token scan, no CUDA selective-scan port).
+
+Shapes: x (B,S,D); internal x̃ (B,S,H,P) with H = d_inner / P heads,
+B̃/C̃ (B,S,G,N) with G=1 group, state N = cfg.ssm_state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+from repro.models.layers import ParamDef, rmsnorm
+
+
+def ssm_dims(cfg: ArchConfig):
+    d_inner = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    G = 1
+    conv_dim = d_inner + 2 * G * N
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    return d_inner, H, P, N, G, conv_dim, d_in_proj
+
+
+def mamba_defs(cfg: ArchConfig):
+    D = cfg.d_model
+    d_inner, H, P, N, G, conv_dim, d_in_proj = ssm_dims(cfg)
+    return {
+        "ln": ParamDef((D,), ("norm",), "ones"),
+        "in_proj": ParamDef((D, d_in_proj), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((cfg.ssm_conv_width, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": ParamDef((conv_dim,), ("ssm_inner",), "zeros"),
+        "A_log": ParamDef((H,), ("ssm_heads",), "alog"),
+        "D": ParamDef((H,), ("ssm_heads",), "ones"),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), "zeros"),
+        "norm": ParamDef((d_inner,), ("norm",), "ones"),
+        "out_proj": ParamDef((d_inner, D), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    d_inner, H, P, N, G, conv_dim, _ = ssm_dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xBC, dt
+
+
+def _split_xbc(xBC, cfg):
+    d_inner, H, P, N, G, _, _ = ssm_dims(cfg)
+    x = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + G * N]
+    Cm = xBC[..., d_inner + G * N:]
+    B_, S = x.shape[0], x.shape[1]
+    return (x.reshape(B_, S, H, P),
+            Bm.reshape(B_, S, G, N),
+            Cm.reshape(B_, S, G, N))
+
+
+def causal_conv(xBC, w, b, cfg):
+    """Depthwise causal conv, width W, via shifted adds (no conv primitive)."""
+    W = cfg.ssm_conv_width
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk):
+    """Chunked SSD forward. x (B,S,H,P), dt (B,S,H), A (H,)<=0, Bm/Cm (B,S,G,N)."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+    f32 = jnp.float32
+
+    xc = x.reshape(B_, nc, L, H, P).astype(f32)
+    dtc = dt.reshape(B_, nc, L, H).astype(f32)
+    Bc = Bm.reshape(B_, nc, L, G, N).astype(f32)[..., 0, :]     # G=1 -> (B,nc,L,N)
+    Cc = Cm.reshape(B_, nc, L, G, N).astype(f32)[..., 0, :]
+
+    dA = dtc * A.astype(f32)                                    # (B,nc,L,H)  <=0
+    A_cs = jnp.cumsum(dA, axis=2)                               # inclusive cumsum
+    A_end = A_cs[:, :, -1:, :]                                  # (B,nc,1,H)
+
+    # intra-chunk (dual / quadratic) term. The exponent is masked BEFORE the
+    # exp: for j > i it is positive and can overflow, and grad-of-where
+    # would propagate the resulting NaN even though the forward masks it.
+    diff = A_cs[:, :, :, None, :] - A_cs[:, :, None, :, :]      # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.exp(jnp.where(mask[None, None, ..., None], diff, -1e9))
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                  # (B,nc,L,L)
+    M = CB[..., None] * decay
+    M = M * dtc[:, :, None, :, :]                               # weight by dt_j
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # chunk states: contribution of chunk c to the running state
+    decay_end = jnp.exp(A_end - A_cs)                           # (B,nc,L,H)
+    S_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_end * dtc, xc)
+
+    # inter-chunk recurrence
+    A_tot = jnp.exp(A_end[:, :, 0, :])                          # (B,nc,H)
+
+    def step(h_prev, inputs):
+        a_tot, s_c = inputs                                     # (B,H), (B,H,N,P)
+        h = h_prev * a_tot[..., None, None] + s_c
+        return h, h_prev
+
+    h0 = jnp.zeros((B_, H, N, P), f32)
+    _, h_prevs = jax.lax.scan(
+        step, h0, (A_tot.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                  # (B,nc,H,N,P)
+
+    y_off = jnp.einsum("bcin,bchnp,bcih->bcihp", Cc, h_prevs, jnp.exp(A_cs))
+    y = (y_diag + y_off).reshape(B_, S, H, P) + D.astype(f32)[None, None, :, None] * x.astype(f32)
+    return y.astype(x.dtype)
+
+
+def mamba_block(p, x, cfg: ArchConfig):
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z, xBC, dt_raw = _split_proj(zxbcdt, cfg)
+    xBC = causal_conv(xBC, p["conv_w"], p["conv_b"], cfg)
+    xs, Bm, Cm = _split_xbc(xBC, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y = ssd_chunked(xs, dt, A, Bm, Cm, p["D"], cfg.ssm_chunk)
+    B_, S = x.shape[0], x.shape[1]
+    y = y.reshape(B_, S, -1)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ p["out_proj"]
+
+
+# --- decode -----------------------------------------------------------------
+
+def mamba_cache_defs(cfg: ArchConfig, batch):
+    d_inner, H, P, N, G, conv_dim, _ = ssm_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), cfg.dtype),
+    }
+
+
+def mamba_decode(p, x, cfg: ArchConfig, cache):
+    """x: (B,1,D) single-token step with constant-size state."""
+    B_ = x.shape[0]
+    d_inner, H, P, N, G, conv_dim, _ = ssm_dims(cfg)
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    z, xBC, dt_raw = _split_proj(h @ p["in_proj"], cfg)
+    win = jnp.concatenate([cache["conv"], xBC.astype(cache["conv"].dtype)], axis=1)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", win, p["conv_w"]) + p["conv_b"])[:, None]
+    new_conv = win[:, 1:]
+    xs, Bm, Cm = _split_xbc(conv_out, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[:, 0] * A)                                  # (B,H)
+    xb = jnp.einsum("bn,bhp->bhnp", Bm[:, 0, 0].astype(jnp.float32),
+                    (dt[:, 0, :, None] * xs[:, 0].astype(jnp.float32)))
+    state = cache["state"] * dA[..., None, None] + xb
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0, 0].astype(jnp.float32), state)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xs[:, 0].astype(jnp.float32)
+    y = y.reshape(B_, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ p["out_proj"], {"state": state, "conv": new_conv}

@@ -1,0 +1,2 @@
+from repro.optim.sgd import sgd, apply_updates
+from repro.optim.adamw import adamw

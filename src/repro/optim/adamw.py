@@ -1,0 +1,28 @@
+"""AdamW (pure JAX) — centralized-baseline optimizer for the examples and
+the one-shot-FL ensemble teacher."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw(lr: float, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+    def init(params):
+        z = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), v)
+        upd = jax.tree.map(
+            lambda mh_, vh_, p: -lr * (mh_ / (jnp.sqrt(vh_) + eps)
+                                       + weight_decay * p.astype(jnp.float32)),
+            mh, vh, params)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return init, update

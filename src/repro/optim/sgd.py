@@ -1,0 +1,27 @@
+"""Minimal client/centralized optimizers (pure JAX, optax-free)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd(lr: float, momentum: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params):
+        if momentum == 0.0:
+            upd = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+            return upd, state
+        m = jax.tree.map(lambda m_, g: momentum * m_ + g.astype(jnp.float32),
+                         state["m"], grads)
+        return jax.tree.map(lambda m_: -lr * m_, m), {"m": m}
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)

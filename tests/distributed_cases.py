@@ -1,0 +1,249 @@
+"""Multi-device integration cases, run in a subprocess with 8 host devices
+(tests/test_distributed.py drives this; the device count must be set before
+jax import, which pytest's own process must not do — see dry-run notes)."""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax                                                      # noqa: E402
+import jax.numpy as jnp                                         # noqa: E402
+import numpy as np                                              # noqa: E402
+
+from repro.core.types import ArchConfig, FLConfig               # noqa: E402
+from repro.core.federated import make_fl_train_step             # noqa: E402
+from repro.core.hierarchical import make_hier_fl_train_step     # noqa: E402
+from repro.core.gossip import make_gossip_step                  # noqa: E402
+from repro.models.model import Model                            # noqa: E402
+from repro.data.synthetic import FedDataConfig, sample_round    # noqa: E402
+
+
+def tiny_cfg(**kw):
+    d = dict(name="tiny", family="dense", num_layers=2, d_model=64,
+             num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=96,
+             block_pattern=("attn+mlp",), dtype=jnp.float32, remat=False)
+    d.update(kw)
+    return ArchConfig(**d)
+
+
+def mesh3():
+    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+
+def mesh2():
+    return jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_batch(cfg, C, B, S, key):
+    t = jax.random.randint(key, (C, B, S), 0, cfg.vocab_size)
+    return {"tokens": t, "labels": t, "mask": jnp.ones((C, B, S)),
+            "sizes": jnp.ones((C,)),
+            "resources": jax.random.uniform(key, (C, 4))}
+
+
+# ---------------------------------------------------------------------------
+
+def case_fedsgd_equals_centralized():
+    """FedSGD + identity compression + all clients == one centralized SGD
+    step over the union batch (exactness of the aggregation wire)."""
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    mesh = mesh2()
+    fl = FLConfig(algorithm="fedsgd", local_steps=1, local_lr=0.1,
+                  uplink_compressor="none", server_opt="fedavg", server_lr=1.0)
+    step = make_fl_train_step(model, fl, mesh, chunk=16)
+    state = step.init_fn(jax.random.PRNGKey(0))
+    C, B, S = step.n_clients, 2, 16
+    batch = make_batch(cfg, C, B, S, jax.random.PRNGKey(1))
+    new_state, _ = jax.jit(step.step_fn)(state, batch)
+
+    # centralized: same init, SGD over the concatenated batch
+    params = model.init(jax.random.PRNGKey(0))
+    flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in batch.items()
+            if k in ("tokens", "labels", "mask")}
+    g = jax.grad(lambda p: model.loss(p, flat, chunk=16)[0])(params)
+    ref = jax.tree.map(lambda p, g_: p - 0.1 * g_, params, g)
+
+    err = max(float(jnp.abs(a - b).max()) for a, b in
+              zip(jax.tree.leaves(new_state.params), jax.tree.leaves(ref)))
+    assert err < 1e-5, err
+    print("case_fedsgd_equals_centralized OK", err)
+
+
+def case_all_algorithms_converge():
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    mesh = mesh3()
+    for algo, comp, sel_, E, sopt, slr in [
+        ("fedsgd", "none", "all", 1, "fedavg", 1.0),
+        ("fedavg", "qsgd8", "all", 2, "fedavg", 1.0),
+        ("fedavg", "qsgd4", "all", 1, "fedavg", 1.0),
+        ("fedavg", "uveq", "all", 1, "fedavg", 1.0),
+        ("fedavg", "topk", "random", 1, "fedadam", 0.05),
+        ("fedavg", "stc", "power_of_choice", 2, "fedavg", 1.0),
+        ("fedavg", "sbc", "all", 1, "fedavg", 1.0),
+        ("scaffold", "none", "all", 2, "fedavg", 1.0),
+        ("fedprox", "sketch", "all", 2, "fedavg", 1.0),
+        ("fedavg", "hsq", "multi_criteria", 1, "fedavg", 1.0),
+        ("fedavg", "randmask", "all", 1, "fedavg", 1.0),
+        ("fedavg", "none", "all", 1, "fedyogi", 0.05),
+        ("fedavg", "none", "all", 1, "fedavgm", 0.5),
+    ]:
+        fl = FLConfig(algorithm=algo, local_steps=E, uplink_compressor=comp,
+                      downlink_compressor="lfl8" if comp == "qsgd8" else "none",
+                      selection=sel_,
+                      clients_per_round=3 if sel_ != "all" else 0,
+                      fedprox_mu=0.01 if algo == "fedprox" else 0.0,
+                      server_opt=sopt, server_lr=slr, sketch_cols=2048,
+                      local_lr=0.02 if comp == "sketch" else 0.05,
+                      topk_fraction=0.05)
+        step = make_fl_train_step(model, fl, mesh, chunk=16)
+        state = step.init_fn(jax.random.PRNGKey(0))
+        batch = make_batch(cfg, step.n_clients, 2, 16, jax.random.PRNGKey(1))
+        jstep = jax.jit(step.step_fn)
+        losses = []
+        for _ in range(3):
+            state, m = jstep(state, batch)
+            losses.append(float(m["loss_all"]))
+        assert all(np.isfinite(losses)), (algo, comp, losses)
+        assert losses[-1] < losses[0] + 0.05, (algo, comp, losses)
+        led = m["ledger"]
+        assert float(led.uplink_dense) > 0
+        if comp not in ("none",):
+            assert float(led.uplink_wire) < float(led.uplink_dense), comp
+        print(f"  {algo}/{comp}/{sel_} OK {losses}")
+    print("case_all_algorithms_converge OK")
+
+
+def case_ledger_accounting_exact():
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    mesh = mesh2()
+    fl = FLConfig(algorithm="fedsgd", uplink_compressor="none")
+    step = make_fl_train_step(model, fl, mesh, chunk=16)
+    state = step.init_fn(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, step.n_clients, 2, 16, jax.random.PRNGKey(1))
+    _, m = jax.jit(step.step_fn)(state, batch)
+    n_params = model.param_count()
+    expect = 4.0 * n_params * step.n_clients       # f32 dense uplink
+    got = float(m["ledger"].uplink_wire)
+    assert abs(got - expect) / expect < 1e-6, (got, expect)
+    print("case_ledger_accounting_exact OK", got)
+
+
+def case_selection_counts():
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    mesh = mesh2()
+    for sel_, m_exp in [("random", 2), ("power_of_choice", 2),
+                        ("multi_criteria", 2), ("all", 4)]:
+        fl = FLConfig(algorithm="fedsgd", selection=sel_, clients_per_round=2)
+        step = make_fl_train_step(model, fl, mesh, chunk=16)
+        state = step.init_fn(jax.random.PRNGKey(0))
+        batch = make_batch(cfg, step.n_clients, 2, 16, jax.random.PRNGKey(1))
+        _, m = jax.jit(step.step_fn)(state, batch)
+        assert int(m["selected"]) == m_exp, (sel_, m["selected"])
+    print("case_selection_counts OK")
+
+
+def case_hier_and_gossip():
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    mesh = mesh3()
+    fl = FLConfig(algorithm="fedavg", local_steps=2, uplink_compressor="qsgd8",
+                  pod_compressor="qsgd8", hierarchical=True, sync_every=2)
+    h = make_hier_fl_train_step(model, fl, mesh, chunk=16)
+    state = h.init_fn(jax.random.PRNGKey(0))
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 2, 2, 16), 0, 96)
+    batch = {"tokens": t, "labels": t, "mask": jnp.ones((2, 2, 2, 16))}
+    se, sc = jax.jit(h.step_edge), jax.jit(h.step_cloud)
+    divs, losses = [], []
+    for i in range(4):
+        stepf = sc if (i + 1) % 2 == 0 else se
+        state, m = stepf(state, batch)
+        divs.append(float(m["pod_divergence"]))
+        losses.append(float(m["loss"]))
+    assert divs[0] > 0 and divs[1] == 0.0 and divs[3] == 0.0, divs
+    assert losses[-1] < losses[0], losses
+    # edge-only round must report fewer wire bytes than cloud round
+    assert h.terms["cloud_wire"] > 0
+
+    flg = FLConfig(algorithm="fedavg", local_steps=1,
+                   uplink_compressor="qsgd8", local_lr=0.01)
+    g = make_gossip_step(model, flg, mesh, chunk=16)
+    gs = g.init_fn(jax.random.PRNGKey(0))
+    ps, rng, rnd = gs
+    ps = jax.tree.map(lambda a: a + 0.1 * jax.random.normal(
+        jax.random.PRNGKey(9), a.shape, a.dtype), ps)
+    gs = (ps, rng, rnd)
+    gstep = jax.jit(g.step_fn)
+    gb = {"tokens": t[0], "labels": t[0], "mask": jnp.ones((2, 2, 16))}
+    cons = []
+    for _ in range(5):
+        gs, m = gstep(gs, gb)
+        cons.append(float(m["consensus"]))
+    assert cons[-1] < cons[0] * 0.7, cons
+    print("case_hier_and_gossip OK", divs, cons[:3])
+
+
+def case_noniid_data_pipeline():
+    cfg = FedDataConfig(vocab_size=96, num_clients=8, seq_len=32,
+                        batch_per_client=4, heterogeneity=2.0)
+    b = sample_round(cfg, jax.random.PRNGKey(0))
+    assert b["tokens"].shape == (8, 4, 32)
+    assert b["resources"].shape == (8, 4)
+    # heterogeneity: client unigram distributions must differ more than iid
+    def unigram_dist(toks, V=96):
+        return np.bincount(np.asarray(toks).ravel(), minlength=V) / toks.size
+    cfg_iid = FedDataConfig(vocab_size=96, num_clients=8, seq_len=32,
+                            batch_per_client=4, heterogeneity=0.0)
+    b_iid = sample_round(cfg_iid, jax.random.PRNGKey(0))
+
+    def spread(batch):
+        ds = np.stack([unigram_dist(batch["tokens"][c]) for c in range(8)])
+        return float(np.abs(ds - ds.mean(0)).mean())
+    assert spread(b) > 1.5 * spread(b_iid), (spread(b), spread(b_iid))
+    print("case_noniid_data_pipeline OK", spread(b), spread(b_iid))
+
+
+def case_compressed_agg_collectives_in_hlo():
+    """The wire claim: compressed aggregation must put int8 (not f32) on the
+    client-axis collective."""
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    mesh = mesh2()
+
+    def hlo_for(comp):
+        fl = FLConfig(algorithm="fedsgd", uplink_compressor=comp)
+        step = make_fl_train_step(model, fl, mesh, chunk=16)
+        state = jax.eval_shape(step.init_fn,
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+        batch = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in
+                 make_batch(cfg, step.n_clients, 2, 16,
+                            jax.random.PRNGKey(1)).items()}
+        fn = jax.jit(step.step_fn,
+                     in_shardings=(step.state_shardings,
+                                   step.batch_sharding_fn(batch)))
+        return fn.lower(state, batch).compile().as_text()
+
+    base = hlo_for("none")
+    q = hlo_for("qsgd8")
+    import re
+    def gather_dtypes(txt):
+        return set(re.findall(r"(\w+)\[[\d,]*\][^=]*all-gather", txt))
+    assert any("s8[" in l and "all-gather" in l for l in q.splitlines()), \
+        "int8 payload must be all-gathered"
+    assert not any("s8[" in l and "all-gather" in l
+                   for l in base.splitlines())
+    print("case_compressed_agg_collectives_in_hlo OK")
+
+
+CASES = {k[5:]: v for k, v in list(globals().items())
+         if k.startswith("case_")}
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    CASES[name]()
+    print("PASS", name)

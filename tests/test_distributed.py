@@ -1,0 +1,32 @@
+"""Drives the multi-device integration cases in subprocesses (each needs
+``xla_force_host_platform_device_count`` set before jax import, which must
+not leak into this pytest process — the dry-run owns 512, we use 8 here)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+CASES = [
+    "fedsgd_equals_centralized",
+    "all_algorithms_converge",
+    "ledger_accounting_exact",
+    "selection_counts",
+    "hier_and_gossip",
+    "noniid_data_pipeline",
+    "compressed_agg_collectives_in_hlo",
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_distributed_case(case):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    p = subprocess.run(
+        [sys.executable, os.path.join(HERE, "distributed_cases.py"), case],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert p.returncode == 0, f"\n--- stdout ---\n{p.stdout}\n--- stderr ---\n{p.stderr[-3000:]}"
+    assert f"PASS {case}" in p.stdout

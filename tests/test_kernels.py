@@ -1,0 +1,88 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.qsgd import qsgd_quantize_blocked
+from repro.kernels.ternary import ternarize_blocked
+from repro.kernels.topk_mask import threshold_sparsify_blocked
+from repro.kernels.count_sketch import count_sketch, CHUNK
+from repro.compress.sketch import hash_params
+
+SHAPES = [(8, 256), (16, 512), (8, 2048), (32, 128)]
+
+
+@pytest.mark.parametrize("nb,block", SHAPES)
+@pytest.mark.parametrize("bits", [4, 8])
+def test_qsgd_kernel_matches_ref(nb, block, bits):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(nb * block + bits))
+    xb = jax.random.normal(k1, (nb, block), jnp.float32) * 3.0
+    u = jax.random.uniform(k2, (nb, block), jnp.float32)
+    q, s = qsgd_quantize_blocked(xb, u, bits=bits, interpret=True)
+    qr, sr = ref.ref_qsgd_quantize_blocked(xb, u, bits)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("nb,block", SHAPES)
+def test_ternary_kernel_matches_ref(nb, block):
+    xb = jax.random.normal(jax.random.PRNGKey(0), (nb, block), jnp.float32)
+    t = jnp.float32(0.8)
+    code, psum, pcnt = ternarize_blocked(xb, t, interpret=True)
+    cr, pr, cr2 = ref.ref_ternarize_blocked(xb, t)
+    np.testing.assert_array_equal(np.asarray(code), np.asarray(cr))
+    np.testing.assert_allclose(np.asarray(psum), np.asarray(pr), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(pcnt), np.asarray(cr2))
+
+
+@pytest.mark.parametrize("nb,block", SHAPES)
+def test_threshold_sparsify_matches_ref(nb, block):
+    xb = jax.random.normal(jax.random.PRNGKey(1), (nb, block), jnp.float32)
+    t = jnp.float32(1.1)
+    kept, resid = threshold_sparsify_blocked(xb, t, interpret=True)
+    kr, rr = ref.ref_threshold_sparsify_blocked(xb, t)
+    np.testing.assert_allclose(np.asarray(kept), np.asarray(kr))
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(rr))
+    # fusion invariant: kept + resid == x exactly
+    np.testing.assert_allclose(np.asarray(kept + resid), np.asarray(xb))
+
+
+@pytest.mark.parametrize("n", [CHUNK, 2 * CHUNK, 4 * CHUNK])
+@pytest.mark.parametrize("rows,cols", [(3, 256), (5, 512)])
+def test_count_sketch_kernel_matches_ref(n, rows, cols):
+    x = jax.random.normal(jax.random.PRNGKey(2), (n,), jnp.float32)
+    a, b = hash_params(rows)
+    S = count_sketch(x, a, b, rows, cols, interpret=True)
+    Sr = ref.ref_count_sketch(x, a, b, rows, cols)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(Sr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ops_wrappers_flat_interface():
+    x = jax.random.normal(jax.random.PRNGKey(3), (5000,), jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(4), (5000,))
+    q, s = ops.qsgd_quantize(x, u, bits=8, block=512)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    code, mu = ops.stc_ternarize(x, 0.05, block=512)
+    assert code.shape == (5000,)
+    k = int(round(5000 * 0.05))
+    assert int((code != 0).sum()) >= k  # ties can exceed k, never fewer
+    kept, resid = ops.threshold_sparsify(x, jnp.float32(1.0), block=512)
+    np.testing.assert_allclose(np.asarray(kept + resid), np.asarray(x))
+    S = ops.sketch(x, rows=3, cols=256)
+    assert S.shape == (3, 256)
+
+
+def test_sketch_kernel_heavy_hitters_roundtrip():
+    """End-to-end: kernel-sketched vector recovers its heavy hitters."""
+    from repro.compress.sketch import unsketch
+    n = 4 * CHUNK
+    x = jnp.zeros((n,)).at[jnp.array([3, 900, 2048])].set(
+        jnp.array([10.0, -7.0, 12.0]))
+    S = ops.sketch(x, rows=5, cols=1024)
+    est = unsketch(S, n)
+    np.testing.assert_allclose(np.asarray(est[jnp.array([3, 900, 2048])]),
+                               [10.0, -7.0, 12.0], atol=1e-3)

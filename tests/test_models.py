@@ -1,0 +1,238 @@
+"""Model substrate: every family's forward/loss, and incremental decode ==
+full forward (the KV-cache/SSM-state correctness contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import ArchConfig
+from repro.models import model as MM
+from repro.models.model import Model
+
+
+def _cfgs():
+    return {
+        "dense": ArchConfig(name="d", family="dense", num_layers=2, d_model=64,
+                            num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                            block_pattern=("attn+mlp",), dtype=jnp.float32,
+                            remat=False, qkv_bias=True),
+        "moe": ArchConfig(name="m", family="moe", num_layers=2, d_model=64,
+                          num_heads=4, num_kv_heads=2, d_ff=96, vocab_size=97,
+                          num_experts=4, experts_per_token=2,
+                          expert_capacity_factor=8.0,
+                          block_pattern=("attn+moe",), dtype=jnp.float32,
+                          remat=False),
+        "ssm": ArchConfig(name="s", family="ssm", num_layers=2, d_model=64,
+                          num_heads=0, vocab_size=97, ssm_state=16,
+                          ssm_head_dim=32, ssm_chunk=4,
+                          block_pattern=("mamba",), dtype=jnp.float32,
+                          remat=False),
+        "hybrid": ArchConfig(name="h", family="hybrid", num_layers=4,
+                             d_model=64, num_heads=4, num_kv_heads=2, d_ff=96,
+                             vocab_size=97, num_experts=4, experts_per_token=2,
+                             expert_capacity_factor=8.0, ssm_state=16,
+                             ssm_head_dim=32, ssm_chunk=4,
+                             block_pattern=("mamba+mlp", "attn+moe"),
+                             dtype=jnp.float32, remat=False),
+        "encdec": ArchConfig(name="e", family="encdec", num_layers=2,
+                             d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                             vocab_size=97, encoder_layers=2,
+                             frontend_tokens=8,
+                             block_pattern=("attn+cross+mlp",),
+                             dtype=jnp.float32, remat=False),
+        "vlm": ArchConfig(name="v", family="vlm", num_layers=2, d_model=64,
+                          num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                          num_patches=8, block_pattern=("attn+mlp",),
+                          dtype=jnp.float32, remat=False),
+    }
+
+
+def _batch(cfg, B=2, S=12, seed=1):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks, "mask": jnp.ones((B, S))}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(7), (B, cfg.num_patches, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frontend"] = jax.random.normal(
+            jax.random.PRNGKey(8), (B, cfg.frontend_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("family", list(_cfgs()))
+def test_loss_finite_and_grads_flow(family):
+    cfg = _cfgs()[family]
+    m = Model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    (loss, metrics), g = jax.value_and_grad(
+        lambda p_: m.loss(p_, batch, chunk=8), has_aux=True)(p)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("family", ["dense", "ssm", "hybrid", "encdec"])
+def test_decode_matches_forward(family):
+    cfg = _cfgs()[family]
+    m = Model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = _batch(cfg, B, S)
+    x, _ = MM.forward(p, batch, cfg, chunk=8)
+    full_logits = MM.unembed(p, x, cfg)
+
+    enc_len = cfg.frontend_tokens if cfg.family == "encdec" else 0
+    cache = m.init_cache(B, S, enc_len=enc_len)
+    if cfg.family == "encdec":
+        from repro.models import layers as L
+        enc_out = MM._encode(p, batch["frontend"].astype(jnp.float32), cfg)
+
+        def fill(psb, csb):
+            for i, e in enumerate(cfg.block_pattern):
+                if "cross" in e.split("+"):
+                    ek, ev = L.encode_cross_kv(psb[f"b{i}"]["cross"], enc_out,
+                                               cfg)
+                    csb[f"b{i}"]["enc"]["ek"] = ek
+                    csb[f"b{i}"]["enc"]["ev"] = ev
+            return csb
+        cache = jax.vmap(fill)(p["layers"], cache)
+
+    step = jax.jit(lambda p_, c, t, pos: m.decode(p_, c, t, pos))
+    errs = []
+    for t in range(S):
+        logits, cache = step(p, cache, batch["tokens"][:, t:t + 1],
+                             jnp.int32(t))
+        errs.append(float(jnp.abs(logits[:, 0] - full_logits[:, t]).max()))
+    assert max(errs) < 5e-3, (family, errs)
+
+
+def test_sliding_window_ring_buffer_decode():
+    cfg = _cfgs()["dense"]
+    cfg = type(cfg)(**{**cfg.__dict__, "sliding_window": 4, "name": "w"})
+    m = Model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = _batch(cfg, B, S)
+    x, _ = MM.forward(p, batch, cfg, chunk=8)
+    full_logits = MM.unembed(p, x, cfg)
+    cache = m.init_cache(B, 4)                    # ring buffer = window
+    step = jax.jit(lambda p_, c, t, pos: m.decode(p_, c, t, pos, window=4))
+    errs = []
+    for t in range(S):
+        logits, cache = step(p, cache, batch["tokens"][:, t:t + 1],
+                             jnp.int32(t))
+        errs.append(float(jnp.abs(logits[:, 0] - full_logits[:, t]).max()))
+    assert max(errs) < 2e-3
+
+
+def test_chunked_attention_equals_dense_reference():
+    from repro.models.layers import chunked_attention
+    B, S, H, KV, hd = 2, 24, 4, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd))
+    pos = jnp.arange(S)
+    for window, causal in [(0, True), (5, True), (0, False)]:
+        out = chunked_attention(q, k, v, q_positions=pos, k_positions=pos,
+                                causal=causal, window=window, chunk=7,
+                                chunk_q=5)
+        # dense reference
+        kk = jnp.repeat(k, H // KV, axis=2)
+        vv = jnp.repeat(v, H // KV, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk)
+        mask = jnp.ones((S, S), bool)
+        if causal:
+            mask &= pos[None, :] <= pos[:, None]
+        if window:
+            mask &= pos[None, :] > pos[:, None] - window
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1),
+                         vv).reshape(B, S, H * hd)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_chunked_xent_matches_dense():
+    from repro.models.model import chunked_xent
+    B, S, D, V = 2, 16, 8, 31
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, D))
+    w = jax.random.normal(jax.random.PRNGKey(1), (D, V))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, V)
+    mask = (jax.random.uniform(jax.random.PRNGKey(3), (B, S)) > 0.3) \
+        .astype(jnp.float32)
+    tot, cnt = chunked_xent(x, w, labels, mask, chunk=4)
+    logits = x @ w
+    lse = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    ref = ((lse - gold) * mask).sum()
+    np.testing.assert_allclose(float(tot), float(ref), rtol=1e-5)
+    np.testing.assert_allclose(float(cnt), float(mask.sum()))
+
+
+def test_ssd_chunk_invariance():
+    """SSD output must not depend on the chunk size (the duality's contract)."""
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N = 2, 16, 3, 8, 5
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, 1, N))
+    Cm = jax.random.normal(ks[4], (B, S, 1, N))
+    D = jnp.ones((H,))
+    y1 = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=2)
+    y2 = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=8)
+    y3 = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y3), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_ssd_equals_naive_recurrence():
+    """Chunked SSD == step-by-step linear recurrence (the 'duality')."""
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N = 1, 12, 2, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, 1, N))
+    Cm = jax.random.normal(ks[4], (B, S, 1, N))
+    D = jnp.zeros((H,))
+    y = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=4)
+
+    h = np.zeros((B, H, N, P))
+    outs = []
+    for s in range(S):
+        dA = np.exp(np.asarray(dt[:, s]) * np.asarray(A))       # (B,H)
+        xb = np.einsum("bn,bhp->bhnp", np.asarray(Bm[:, s, 0]),
+                       np.asarray(dt[:, s])[:, :, None] * np.asarray(x[:, s]))
+        h = h * dA[:, :, None, None] + xb
+        outs.append(np.einsum("bn,bhnp->bhp", np.asarray(Cm[:, s, 0]), h))
+    ref = np.stack(outs, axis=1)                                 # (B,S,H,P)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-3, atol=2e-4)
+
+
+def test_int8_kv_cache_decode_close_to_exact():
+    """Quantized (int8 + per-token/head scale) KV cache — §Perf B2 — must
+    track the exact decode closely."""
+    cfg = _cfgs()["dense"]
+    m = Model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = _batch(cfg, B, S)
+    x, _ = MM.forward(p, batch, cfg, chunk=8)
+    full_logits = MM.unembed(p, x, cfg)
+    cache = m.init_cache(B, S, quantized=True)
+    assert cache["b0"]["kv"]["k"].dtype == jnp.int8
+    step = jax.jit(lambda p_, c, t, pos: m.decode(p_, c, t, pos))
+    errs = []
+    for t in range(S):
+        logits, cache = step(p, cache, batch["tokens"][:, t:t + 1],
+                             jnp.int32(t))
+        errs.append(float(jnp.abs(logits[:, 0] - full_logits[:, t]).max()))
+    assert max(errs) < 0.05, errs
