@@ -57,7 +57,10 @@ def bench_compression(rounds):
     n = 1 << 20
     x = jax.random.normal(jax.random.PRNGKey(0), (n,))
     for name in ["none", "qsgd8", "qsgd4", "uveq", "hsq", "topk", "stc",
-                 "sbc", "randmask", "sketch"]:
+                 "sbc", "randmask", "sketch",
+                 # chained CommPipelines (combined schemes, one spec string)
+                 "topk:0.01>>qsgd:8", "randmask:0.05>>qsgd:8",
+                 "sketch>>qsgd:8"]:
         comp = make_compressor(name, fraction=0.01)
         rt = jax.jit(lambda r, v: comp.roundtrip(r, v))
         us = _timeit(rt, jax.random.PRNGKey(1), x)
@@ -202,6 +205,14 @@ def bench_bytes_to_loss(rounds):
         ("topk_1pct", FLConfig(algorithm="fedavg", local_steps=2,
                                local_lr=0.2, uplink_compressor="topk",
                                topk_fraction=0.01)),
+        # combined scheme via the CommPipeline spec grammar: quantised-sparse
+        ("topk5pct>>qsgd8", FLConfig(algorithm="fedavg", local_steps=2,
+                                     local_lr=0.2,
+                                     uplink_compressor="topk:0.05>>qsgd:8")),
+        # DGC: momentum-corrected sparsification
+        ("dgc_1pct", FLConfig(algorithm="fedavg", local_steps=2,
+                              local_lr=0.2, uplink_compressor="topk",
+                              topk_fraction=0.01, dgc_momentum=0.9)),
         ("sketch", FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.1,
                             uplink_compressor="sketch",
                             topk_fraction=0.1)),

@@ -30,6 +30,12 @@ METHODS = {
                        uplink_compressor="sbc", topk_fraction=0.01),
     "sketch": FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.1,
                        uplink_compressor="sketch"),
+    # combined schemes — one-line CommPipeline spec strings
+    "topk5%>>qsgd8": FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                              uplink_compressor="topk:0.05>>qsgd:8"),
+    "dgc_1%": FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                       uplink_compressor="topk", topk_fraction=0.01,
+                       dgc_momentum=0.9),
 }
 
 

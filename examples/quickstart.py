@@ -20,7 +20,9 @@ from repro.models.model import Model
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--compressor", default="qsgd8",
-                    help="none|qsgd8|qsgd4|topk|stc|sbc|sketch|hsq|randmask")
+                    help="registry name (none|qsgd8|qsgd4|topk|stc|sbc|sketch"
+                         "|hsq|randmask) or a pipeline spec like "
+                         "'topk:0.01>>qsgd:8' (DESIGN.md §3)")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=8)
     args = ap.parse_args()

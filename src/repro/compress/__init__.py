@@ -1,4 +1,9 @@
-from repro.compress.api import Compressor, Identity, make_compressor
+from repro.compress.api import (CommTransform, Compressor, Identity,
+                                make_compressor, make_pipeline)
+from repro.compress.pipeline import (chain, error_feedback,
+                                     momentum_correction)
 from repro.compress import quantization, sparsification, sketch  # registers
 
-__all__ = ["Compressor", "Identity", "make_compressor"]
+__all__ = ["CommTransform", "Compressor", "Identity", "chain",
+           "error_feedback", "momentum_correction", "make_compressor",
+           "make_pipeline"]

@@ -1,88 +1,218 @@
-"""Compressor protocol — the survey's §III.B.5, as a composable operator.
+"""CommTransform protocol — the survey's §III.B.5 as *composable* wire stages.
 
-A compressor is a *pure, shape-polymorphic, leaf-wise* pair of maps
+The survey's central observation about practical systems is that they *layer*
+reduction schemes: STC = top-k sparsification + ternary quantization, DGC =
+sparsification + momentum correction, FetchSGD = sketching + top-k recovery.
+The protocol here mirrors optax's ``GradientTransformation`` so those layers
+compose instead of being one-off classes:
 
-    compress(rng, x: f32[n])            -> payload: dict[str, Array]
-    decompress(payload, n)              -> f32[n]
+    init(leaf_shape)           -> state          (pipeline-owned, per leaf)
+    encode(state, rng, x)      -> (payload, state')
+    decode(payload, n)         -> x_hat: f32[n]
 
-operating on flattened parameter/update leaves.  Compression happens *inside*
-the FL aggregation ``shard_map`` (``repro.core.aggregation``), so the payload
-arrays are exactly what crosses the ICI/DCN links via ``all_gather`` — the
-compiled HLO's collective bytes are the wire bytes.
+operating on flattened parameter/update leaves.  A transform may declare a
+``carrier_key``: the payload entry holding the f32 values a *further* stage
+may refine.  ``chain(topk(0.01), ternary())`` therefore *is* STC — top-k
+emits ``{vals, idx}``, ternary re-encodes ``vals`` — and
+``chain(topk(0.05), qsgd(8))`` is a new combined workload, all from one-line
+spec strings (``"topk:0.01>>qsgd:8"``, see DESIGN.md §3).
 
-Byte accounting (``CommLedger``):
-  * ``wire_bits(n)``    — bits our dtype-packed payload occupies on the link.
-  * ``entropy_bits(n)`` — bits the source paper's entropy coder (Golomb/Elias)
-                          would achieve; reported alongside, never used for
-                          shapes. See DESIGN.md §1 (hardware adaptation).
+Encoding happens *inside* the FL aggregation ``shard_map``
+(``repro.core.aggregation``), so the payload arrays are exactly what crosses
+the ICI/DCN links via ``all_gather`` — the compiled HLO's collective bytes
+are the wire bytes.
 
-Biased compressors (top-k, STC, SBC, signSGD/HSQ) set ``biased = True`` and
-are wrapped in error feedback by the FL layer.
+Byte accounting (``CommLedger``, contract in DESIGN.md §1):
+  * ``meta_bits(n)``    — bits of a stage's non-carrier side info (indices,
+                          scales, signs) as dtype-packed on the link.
+  * ``carrier_len(n)``  — length of the carrier a following stage refines.
+  * ``wire_bits(n)``    — standalone total: ``meta + 32 * carrier_len`` (an
+                          unrefined carrier travels as f32).  Chains sum the
+                          per-stage ``meta_bits`` over the *shrinking* carrier
+                          lengths, so compression ratios compose
+                          multiplicatively.
+  * ``entropy_bits(n)`` — same, under the source papers' entropy coders
+                          (Golomb/Elias); reported alongside, never used for
+                          shapes.
+
+Biased transforms (top-k, STC, SBC, signSGD/HSQ) set ``biased = True``; the
+FL layer wraps biased pipelines in ``error_feedback(...)`` (or
+``momentum_correction(...)`` for DGC) — wrapping *transforms*, not special
+cases in the trainer.  Their residual/momentum state lives in the pipeline
+state threaded through ``FLState.comm_state``.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 Payload = Dict[str, jax.Array]
+PyTree = Any
 
 
-class Compressor:
+class CommTransform:
+    """One stage of the communication pipeline (optax-style)."""
+
     name: str = "base"
-    biased: bool = False
+    biased: bool = False          # needs error feedback when used bare
+    carrier_key: Optional[str] = None   # payload entry a next stage refines
 
-    def compress(self, rng: jax.Array, x: jax.Array) -> Payload:
+    # --- pipeline state ----------------------------------------------------
+    def init(self, shape: Sequence[int]) -> PyTree:
+        """Per-leaf state for a leaf of this shape. Must be zero-initialised
+        arrays (the FL layer materialises a (C,)-leading client batch of
+        them); stateless stages return ``()``."""
+        return ()
+
+    @property
+    def stateful(self) -> bool:
+        tmpl = jax.eval_shape(lambda: self.init((1,)))
+        return len(jax.tree.leaves(tmpl)) > 0
+
+    @property
+    def is_identity(self) -> bool:
+        return False
+
+    # --- wire maps ---------------------------------------------------------
+    def encode(self, state: PyTree, rng: jax.Array,
+               x: jax.Array) -> Tuple[Payload, PyTree]:
         raise NotImplementedError
 
-    def decompress(self, payload: Payload, n: int) -> jax.Array:
+    def decode(self, payload: Payload, n: int) -> jax.Array:
         raise NotImplementedError
+
+    # --- byte accounting ---------------------------------------------------
+    def carrier_len(self, n: int) -> int:
+        return 0
+
+    def meta_bits(self, n: int) -> float:
+        raise NotImplementedError
+
+    def meta_entropy_bits(self, n: int) -> float:
+        return self.meta_bits(n)
 
     def wire_bits(self, n: int) -> float:
-        raise NotImplementedError
+        return self.meta_bits(n) + 32.0 * self.carrier_len(n)
 
     def entropy_bits(self, n: int) -> float:
-        return self.wire_bits(n)
+        return self.meta_entropy_bits(n) + 32.0 * self.carrier_len(n)
 
-    # round-trip helper (used by error feedback and tests)
+    # --- stateless conveniences (the legacy ``Compressor`` surface) --------
+    def compress(self, rng: jax.Array, x: jax.Array) -> Payload:
+        payload, _ = self.encode(self.init(x.shape), rng, x)
+        return payload
+
+    def decompress(self, payload: Payload, n: int) -> jax.Array:
+        return self.decode(payload, n)
+
     def roundtrip(self, rng, x):
-        return self.decompress(self.compress(rng, x), x.shape[0])
+        return self.decode(self.compress(rng, x), x.shape[0])
 
 
-class Identity(Compressor):
-    """No compression — the FedAvg baseline (f32 on the wire)."""
+# legacy alias — pre-pipeline code and tests import ``Compressor``
+Compressor = CommTransform
+
+
+class Identity(CommTransform):
+    """No compression — the FedAvg baseline (f32 on the wire). Acts as the
+    unit of ``chain`` (it is filtered out of pipelines)."""
     name = "none"
+    carrier_key = "x"
 
-    def compress(self, rng, x):
-        return {"x": x.astype(jnp.float32)}
+    def encode(self, state, rng, x):
+        return {"x": x.astype(jnp.float32)}, state
 
-    def decompress(self, payload, n):
+    def decode(self, payload, n):
         return payload["x"]
 
-    def wire_bits(self, n):
-        return 32.0 * n
+    def carrier_len(self, n):
+        return n
+
+    def meta_bits(self, n):
+        return 0.0
+
+    @property
+    def is_identity(self):
+        return True
 
 
-_REGISTRY: Dict[str, Callable[..., Compressor]] = {}
+# ---------------------------------------------------------------------------
+# Registry + spec-string grammar (DESIGN.md §3)
+#
+#   spec     := stage (">>" stage)*
+#   stage    := name [":" arg ("," arg)*]
+#   name     := legacy registry name (exact match wins) | stage-factory name
+#   arg      := number (int or float)
+#
+# Every pre-pipeline registry name ("qsgd8", "topk", "stc", "none", ...)
+# resolves unchanged, with identical wire_bits.
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., CommTransform]] = {}
+_STAGES: Dict[str, Callable[..., CommTransform]] = {}
 
 
 def register(name: str):
+    """Register a legacy-name builder (kwargs-driven, e.g. ``qsgd8``)."""
     def deco(fn):
         _REGISTRY[name] = fn
         return fn
     return deco
 
 
-def make_compressor(name: str, **kw) -> Compressor:
-    """Build a compressor by registry name, e.g. ``qsgd8``, ``topk``, ``stc``."""
-    if name in ("none", None, ""):
-        return Identity()
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
-    return _REGISTRY[name](**kw)
+def register_stage(name: str):
+    """Register a stage factory for the spec grammar (positional numeric
+    args override the shared kwargs), e.g. ``qsgd`` for ``"qsgd:8"``."""
+    def deco(fn):
+        _STAGES[name] = fn
+        return fn
+    return deco
 
+
+def _num(tok: str):
+    tok = tok.strip()
+    try:
+        return int(tok)
+    except ValueError:
+        return float(tok)
+
+
+def _make_stage(token: str, **kw) -> CommTransform:
+    token = token.strip()
+    if token in ("none", "identity", ""):
+        return Identity()
+    name, _, argstr = token.partition(":")
+    name = name.strip()
+    if not argstr and name in _REGISTRY:      # legacy exact names win
+        return _REGISTRY[name](**kw)
+    if name not in _STAGES:
+        known = sorted(set(_REGISTRY) | set(_STAGES))
+        raise KeyError(f"unknown compressor stage {token!r}; have {known}")
+    args = [_num(a) for a in argstr.split(",") if a.strip()] if argstr else []
+    return _STAGES[name](*args, **kw)
+
+
+def make_compressor(spec: Optional[str], **kw) -> CommTransform:
+    """Build a communication pipeline from a registry name or spec string.
+
+    ``make_compressor("qsgd8")`` (legacy names, unchanged), or composed:
+    ``make_compressor("topk:0.01>>qsgd:8")`` — top-k support with
+    QSGD-quantised values.  ``kw`` (``fraction``, ``block``, ``rows``,
+    ``cols``, ...) supplies defaults that per-stage positional args override.
+    """
+    if spec in ("none", None, ""):
+        return Identity()
+    from repro.compress.pipeline import chain   # late import (cycle)
+    stages = [_make_stage(tok, **kw) for tok in spec.split(">>")]
+    return chain(*stages)
+
+
+# ``make_pipeline`` is the forward-looking name; both resolve identically.
+make_pipeline = make_compressor
 
 register("none")(lambda **kw: Identity())
+register_stage("none")(lambda **kw: Identity())
+register_stage("identity")(lambda **kw: Identity())

@@ -1,0 +1,200 @@
+"""Pipeline combinators for the CommTransform protocol (DESIGN.md §2).
+
+``chain(a, b, ...)`` composes stages along each stage's *carrier*: stage i's
+``payload[carrier_key]`` is re-encoded by stage i+1 instead of travelling as
+f32.  Reconstruction runs the stages backwards, substituting each refined
+carrier before the outer decode.  Because only the shrinking carrier is
+re-encoded (side info like indices/scales is kept at each stage), wire bits
+compose multiplicatively: ``chain(topk(0.01), qsgd(8))`` pays top-k's index
+bits on k = 0.01·n coordinates plus QSGD's 8 bits on those k values.
+
+``error_feedback(t)`` / ``momentum_correction(t)`` are *wrapping* transforms
+(EF-SGD / DGC): they own the residual / momentum state that previously lived
+in ``FLState.ef_residual`` and the trainer, and expose the same protocol, so
+the aggregation layer threads state generically with no special cases.
+
+State contract (DESIGN.md §2): every array returned by ``init(shape)`` is
+zero-initialised and either leaf-shaped (shards like the parameter it
+accompanies) or small; wrappers reshape leaf-shaped state to the flat
+working vector internally, so they compose with any inner pipeline.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress.api import CommTransform, Identity
+
+__all__ = ["Chain", "chain", "ErrorFeedback", "error_feedback",
+           "MomentumCorrection", "momentum_correction"]
+
+
+class Chain(CommTransform):
+    """Sequential composition of stages along their carriers."""
+
+    carrier_key = None          # chains are not themselves chainable stages
+
+    def __init__(self, *stages: CommTransform):
+        assert len(stages) >= 2, "use chain(...) — it handles 0/1 stages"
+        for s in stages[:-1]:
+            if s.carrier_key is None:
+                raise ValueError(
+                    f"stage {s.name!r} is terminal (no carrier) and cannot "
+                    f"be followed by another stage")
+        self.stages: Tuple[CommTransform, ...] = tuple(stages)
+        self.name = ">>".join(s.name for s in stages)
+
+    @property
+    def biased(self):
+        return any(s.biased for s in self.stages)
+
+    def _lens(self, n):
+        """Input length seen by each stage: n, then the carrier lengths."""
+        ms = [n]
+        for s in self.stages[:-1]:
+            ms.append(s.carrier_len(ms[-1]))
+        return ms
+
+    # --- state -------------------------------------------------------------
+    def init(self, shape):
+        n = int(np.prod(shape))
+        ms = self._lens(n)
+        return tuple(s.init(tuple(shape) if i == 0 else (ms[i],))
+                     for i, s in enumerate(self.stages))
+
+    # --- wire maps ---------------------------------------------------------
+    def encode(self, state, rng, x):
+        payload, new_states, cur = {}, [], x
+        last = len(self.stages) - 1
+        for i, s in enumerate(self.stages):
+            p, st = s.encode(state[i], jax.random.fold_in(rng, i), cur)
+            new_states.append(st)
+            if i < last:
+                p = dict(p)
+                cur = p.pop(s.carrier_key)
+            payload[f"s{i}"] = p
+        return payload, tuple(new_states)
+
+    def decode(self, payload, n):
+        ms = self._lens(n)
+        last = len(self.stages) - 1
+        cur = self.stages[last].decode(payload[f"s{last}"], ms[last])
+        for i in range(last - 1, -1, -1):
+            p = dict(payload[f"s{i}"])
+            p[self.stages[i].carrier_key] = cur
+            cur = self.stages[i].decode(p, ms[i])
+        return cur
+
+    # --- byte accounting ----------------------------------------------------
+    def carrier_len(self, n):
+        return self.stages[-1].carrier_len(self._lens(n)[-1])
+
+    def meta_bits(self, n):
+        return sum(s.meta_bits(m) for s, m in zip(self.stages, self._lens(n)))
+
+    def meta_entropy_bits(self, n):
+        return sum(s.meta_entropy_bits(m)
+                   for s, m in zip(self.stages, self._lens(n)))
+
+
+def chain(*transforms: CommTransform) -> CommTransform:
+    """Compose transforms; Identity is the unit, a single stage is itself."""
+    flat = []
+    for t in transforms:
+        if isinstance(t, Chain):
+            flat.extend(t.stages)
+        elif t.is_identity:
+            continue
+        else:
+            flat.append(t)
+    if not flat:
+        return Identity()
+    if len(flat) == 1:
+        return flat[0]
+    return Chain(*flat)
+
+
+# ---------------------------------------------------------------------------
+# Wrapping transforms — stateful correction schemes as pipeline stages
+# ---------------------------------------------------------------------------
+
+class _Wrapper(CommTransform):
+    """Shared plumbing: decode and byte accounting delegate to the inner
+    pipeline (corrections change *what* is encoded, not the wire format)."""
+
+    biased = False              # the wrapper is the bias correction
+    carrier_key = None          # wrappers are outermost, not chainable stages
+
+    def __init__(self, inner: CommTransform):
+        self.inner = inner
+
+    def decode(self, payload, n):
+        return self.inner.decode(payload, n)
+
+    def meta_bits(self, n):
+        return self.inner.wire_bits(n)
+
+    def meta_entropy_bits(self, n):
+        return self.inner.entropy_bits(n)
+
+
+class ErrorFeedback(_Wrapper):
+    """EF-SGD (Karimireddy et al. 2019; the survey's biased-compressor fix):
+    encode x + e, keep e' = (x + e) − decode(encode(x + e)) locally."""
+
+    def __init__(self, inner: CommTransform, decay: float = 1.0):
+        super().__init__(inner)
+        self.decay = decay
+        self.name = f"ef({inner.name})"
+
+    def init(self, shape):
+        return {"residual": jnp.zeros(shape, jnp.float32),
+                "inner": self.inner.init(shape)}
+
+    def encode(self, state, rng, x):
+        y = x + self.decay * state["residual"].reshape(x.shape)
+        payload, ist = self.inner.encode(state["inner"], rng, y)
+        # local decode of our own payload: one extra O(n) dequantize per leaf
+        # vs. an aggregator that reuses its post-gather decode — the price of
+        # keeping correction state out of the aggregation layer entirely
+        y_hat = self.inner.decode(payload, y.shape[0])
+        res = (y - y_hat).reshape(state["residual"].shape)
+        return payload, {"residual": res, "inner": ist}
+
+
+class MomentumCorrection(_Wrapper):
+    """DGC (Lin et al. 2018) momentum correction + gradient accumulation:
+    u ← m·u + x; v ← v + u; transmit encode(v); the unsent part of v stays
+    local and the momentum of *sent* coordinates is cleared (masking)."""
+
+    def __init__(self, inner: CommTransform, momentum: float = 0.9):
+        super().__init__(inner)
+        self.momentum = momentum
+        self.name = f"mc{momentum:g}({inner.name})"
+
+    def init(self, shape):
+        return {"u": jnp.zeros(shape, jnp.float32),
+                "v": jnp.zeros(shape, jnp.float32),
+                "inner": self.inner.init(shape)}
+
+    def encode(self, state, rng, x):
+        u = self.momentum * state["u"].reshape(x.shape) + x
+        v = state["v"].reshape(x.shape) + u
+        payload, ist = self.inner.encode(state["inner"], rng, v)
+        v_hat = self.inner.decode(payload, v.shape[0])
+        sent = v_hat != 0.0
+        new_v = (v - v_hat).reshape(state["v"].shape)
+        new_u = jnp.where(sent, 0.0, u).reshape(state["u"].shape)
+        return payload, {"u": new_u, "v": new_v, "inner": ist}
+
+
+def error_feedback(inner: CommTransform, decay: float = 1.0) -> CommTransform:
+    return ErrorFeedback(inner, decay)
+
+
+def momentum_correction(inner: CommTransform,
+                        momentum: float = 0.9) -> CommTransform:
+    return MomentumCorrection(inner, momentum)

@@ -1,4 +1,4 @@
-"""Quantization compressors (survey §III.B.5 — Quantization).
+"""Quantization stages (survey §III.B.5 — Quantization).
 
   * ``qsgd8`` / ``qsgd4``  — FedPAQ's quantizer [45] = QSGD: stochastic uniform
     quantization with a per-block scale. Unbiased: E[Q(x)] = x.
@@ -7,10 +7,13 @@
     distinguish directions.
   * ``hsq``   — Hyper-Sphere-Quantization-style [71] 1-bit direction + per-block
     norm (the vector-codebook is degenerate to the sign codebook on TPU; see
-    DESIGN.md hardware-adaptation notes). Biased -> error feedback.
+    DESIGN.md §1). Biased -> error feedback.
   * ``uveq``  — UVeQFed-style [72] subtractive-dither uniform quantizer:
     dither u ~ U(-Δ/2, Δ/2) added before rounding and subtracted after —
     unbiased with bounded, input-independent distortion.
+
+All are *terminal* pipeline stages (no carrier): they typically end a chain,
+e.g. ``"topk:0.01>>qsgd:8"`` quantises the top-k values.
 """
 from __future__ import annotations
 
@@ -19,18 +22,22 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.compress.api import Compressor, register
+from repro.compress.api import CommTransform, register, register_stage
 
 
 def _blocked(x, block):
     n = x.shape[0]
+    # adapt to short inputs (e.g. a chain carrier of k << block values):
+    # one block of length n instead of zero-padding to a full block, so the
+    # payload that crosses the wire matches the ledger's 8n + 32*nb bits
+    block = max(1, min(block, n))
     nb = -(-n // block)
     pad = nb * block - n
     xb = jnp.pad(x, (0, pad)).reshape(nb, block)
     return xb, nb, pad
 
 
-class QSGD(Compressor):
+class QSGD(CommTransform):
     """Stochastic uniform quantization, per-block max-abs scale, int8 wire."""
 
     def __init__(self, bits=8, block=2048, use_kernel=False):
@@ -41,37 +48,37 @@ class QSGD(Compressor):
         self.name = f"qsgd{bits}"
         self.use_kernel = use_kernel
 
-    def compress(self, rng, x):
+    def encode(self, state, rng, x):
         if self.use_kernel:
             from repro.kernels import ops
             u = jax.random.uniform(rng, x.shape, jnp.float32)
             q, scale = ops.qsgd_quantize(x, u, self.bits, self.block)
-            return {"q": q, "scale": scale}
+            return {"q": q, "scale": scale}, state
         xb, nb, _ = _blocked(x.astype(jnp.float32), self.block)
         scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
         y = xb / jnp.maximum(scale, 1e-30) * self.levels
         u = jax.random.uniform(rng, xb.shape, jnp.float32)
         q = jnp.floor(y + u).astype(jnp.int8)
-        return {"q": q, "scale": scale[:, 0]}
+        return {"q": q, "scale": scale[:, 0]}, state
 
-    def decompress(self, payload, n):
+    def decode(self, payload, n):
         q = payload["q"].astype(jnp.float32)
         scale = payload["scale"][:, None]
         x = q / self.levels * scale
         return x.reshape(-1)[:n]
 
-    def wire_bits(self, n):
+    def meta_bits(self, n):
         nb = -(-n // self.block)
         return 8.0 * n + 32.0 * nb               # int8 storage + f32 scales
 
-    def entropy_bits(self, n):
+    def meta_entropy_bits(self, n):
         nb = -(-n // self.block)
         # Elias-coded QSGD costs ~bits+1 per coordinate; at 8 bits the int8
         # dtype packing is already at least as tight, so take the min.
         return min(float(self.bits + 1), 8.0) * n + 32.0 * nb
 
 
-class UVeQ(Compressor):
+class UVeQ(CommTransform):
     """Subtractive-dither uniform quantization (UVeQFed-style, unbiased)."""
 
     def __init__(self, bits=4, block=2048):
@@ -79,15 +86,15 @@ class UVeQ(Compressor):
         self.block = block
         self.name = f"uveq{bits}"
 
-    def compress(self, rng, x):
+    def encode(self, state, rng, x):
         xb, nb, _ = _blocked(x.astype(jnp.float32), self.block)
         scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
         delta = jnp.maximum(scale, 1e-30) / (2 ** (self.bits - 1) - 1)
         u = jax.random.uniform(rng, xb.shape, jnp.float32, -0.5, 0.5) * delta
         q = jnp.round((xb + u) / delta).astype(jnp.int8)
-        return {"q": q, "scale": scale[:, 0], "useed": rng}
+        return {"q": q, "scale": scale[:, 0], "useed": rng}, state
 
-    def decompress(self, payload, n):
+    def decode(self, payload, n):
         scale = payload["scale"][:, None]
         delta = jnp.maximum(scale, 1e-30) / (2 ** (self.bits - 1) - 1)
         xb = payload["q"].astype(jnp.float32) * delta
@@ -95,16 +102,16 @@ class UVeQ(Compressor):
         u = jax.random.uniform(payload["useed"], xb.shape, jnp.float32, -0.5, 0.5) * delta
         return (xb - u).reshape(-1)[:n]
 
-    def wire_bits(self, n):
+    def meta_bits(self, n):
         nb = -(-n // self.block)
         return 8.0 * n + 32.0 * nb + 32.0
 
-    def entropy_bits(self, n):
+    def meta_entropy_bits(self, n):
         nb = -(-n // self.block)
         return float(self.bits) * n + 32.0 * nb + 32.0
 
 
-class HSQ(Compressor):
+class HSQ(CommTransform):
     """1-bit sign + per-block l2-scaled magnitude (HSQ's codebook degenerated
     to the sign hypersphere — the TPU-idiomatic variant)."""
     biased = True
@@ -113,20 +120,20 @@ class HSQ(Compressor):
         self.block = block
         self.name = "hsq"
 
-    def compress(self, rng, x):
+    def encode(self, state, rng, x):
         xb, nb, _ = _blocked(x.astype(jnp.float32), self.block)
         mu = jnp.mean(jnp.abs(xb), axis=1)
-        return {"sign": jnp.sign(xb).astype(jnp.int8), "mu": mu}
+        return {"sign": jnp.sign(xb).astype(jnp.int8), "mu": mu}, state
 
-    def decompress(self, payload, n):
+    def decode(self, payload, n):
         xb = payload["sign"].astype(jnp.float32) * payload["mu"][:, None]
         return xb.reshape(-1)[:n]
 
-    def wire_bits(self, n):
+    def meta_bits(self, n):
         nb = -(-n // self.block)
         return 8.0 * n + 32.0 * nb               # int8-stored signs
 
-    def entropy_bits(self, n):
+    def meta_entropy_bits(self, n):
         nb = -(-n // self.block)
         return 1.0 * n + 32.0 * nb               # 1 bit/sign after packing
 
@@ -136,3 +143,9 @@ register("qsgd4")(lambda block=2048, **kw: QSGD(4, block))
 register("lfl8")(lambda block=2048, **kw: QSGD(8, block))
 register("uveq")(lambda block=2048, **kw: UVeQ(4, block))
 register("hsq")(lambda block=2048, **kw: HSQ(block))
+
+register_stage("qsgd")(lambda bits=8, blk=None, block=2048, **kw:
+                       QSGD(int(bits), int(blk or block)))
+register_stage("uveq")(lambda bits=4, blk=None, block=2048, **kw:
+                       UVeQ(int(bits), int(blk or block)))
+register_stage("hsq")(lambda blk=None, block=2048, **kw: HSQ(int(blk or block)))

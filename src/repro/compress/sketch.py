@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.compress.api import Compressor, register
+from repro.compress.api import CommTransform, register, register_stage
 
 def hash_params(rows: int, seed: int = 17):
     ks = jax.random.split(jax.random.PRNGKey(seed), 2)
@@ -55,13 +55,17 @@ def unsketch(S, n, seed=17):
     return jnp.median(est, axis=0)
 
 
-class CountSketch(Compressor):
-    """FetchSGD-style sketch; top-k heavy hitters recovered on decompress.
+class CountSketch(CommTransform):
+    """FetchSGD-style sketch; top-k heavy hitters recovered on decode.
 
     The sketch width adapts to the leaf size (rows*cols <= n/2) so the wire
     always beats dense f32 — FetchSGD sketches the whole gradient at a fixed
-    compression ratio; leaf-wise operation needs the same scaling."""
+    compression ratio; leaf-wise operation needs the same scaling.
+
+    The flattened sketch is the carrier, so a quantizer can refine it:
+    ``"sketch>>qsgd:8"`` puts int8 sketch buckets on the wire."""
     biased = True
+    carrier_key = "S"
 
     def __init__(self, rows=5, cols=4096, topk_fraction=0.01, seed=17):
         self.rows, self.cols, self.seed = rows, cols, seed
@@ -71,19 +75,27 @@ class CountSketch(Compressor):
     def _cols(self, n):
         return int(min(self.cols, max(8, n // (2 * self.rows))))
 
-    def compress(self, rng, x):
-        return {"S": sketch(x, self.rows, self._cols(x.shape[0]), self.seed)}
+    def encode(self, state, rng, x):
+        S = sketch(x, self.rows, self._cols(x.shape[0]), self.seed)
+        return {"S": S.reshape(-1)}, state
 
-    def decompress(self, payload, n):
-        est = unsketch(payload["S"], n, self.seed)
+    def decode(self, payload, n):
+        S = payload["S"].reshape(self.rows, self._cols(n))
+        est = unsketch(S, n, self.seed)
         k = max(1, int(round(n * self.topk_fraction)))
         _, idx = jax.lax.top_k(jnp.abs(est), k)
         out = jnp.zeros((n,), jnp.float32)
         return out.at[idx].set(est[idx])
 
-    def wire_bits(self, n):
-        return 32.0 * self.rows * self._cols(n)
+    def carrier_len(self, n):
+        return self.rows * self._cols(n)
+
+    def meta_bits(self, n):
+        return 0.0
 
 
 register("sketch")(lambda rows=5, cols=4096, fraction=0.01, **kw:
                    CountSketch(rows, cols, fraction))
+register_stage("sketch")(lambda r=None, c=None, rows=5, cols=4096,
+                         fraction=0.01, **kw:
+                         CountSketch(int(r or rows), int(c or cols), fraction))

@@ -1,14 +1,19 @@
-"""Sparsification compressors (survey §III.B.5 — Sparsification).
+"""Sparsification stages (survey §III.B.5 — Sparsification).
 
   * ``topk``     — magnitude top-k with (values, indices) wire format; the GGS
-    [67] setting. Biased -> error feedback at the FL layer.
-  * ``stc``      — Sparse Ternary Compression [39]: top-k support, values
-    ternarised to ±mean(|top-k|). Wire = indices + signs + one scalar.
-    The paper's Golomb coding is reported via ``entropy_bits``.
+    [67] setting. Carrier = the k surviving values, so further stages refine
+    them: ``chain(topk, ternary)`` *is* STC, ``chain(topk, qsgd)`` is the
+    quantised-sparse combined scheme. Biased -> error feedback.
+  * ``ternary``  — STC's quantization half [39]: values -> sign(x)·mean(|x|).
+    Wire = signs + one scalar; the paper's Golomb coding is reported via
+    ``entropy_bits``.
+  * ``stc``      — legacy name for ``chain(topk, ternary)`` (bit-for-bit the
+    old monolithic STC compressor).
   * ``sbc``      — Sparse Binary Compression [69]: keep only the dominant-sign
     half of the top-k support, average its magnitudes (1 fewer bit than STC).
   * ``randmask`` — CPFed [68]: data-independent random mask (unbiased after
     1/p rescale) + optional Gaussian noise on the surviving values (DP).
+    Carrier = surviving values (only they travel; the mask rides a seed).
 
 All operate on flattened f32 leaves; k is a static fraction of n (fixed shapes
 under jit — matching the source papers' fixed-sparsity setting).
@@ -20,70 +25,63 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.compress.api import Compressor, register
+from repro.compress.api import CommTransform, register, register_stage
 
 
 def _k(n, fraction):
     return max(1, int(round(n * fraction)))
 
 
-class TopK(Compressor):
+class TopK(CommTransform):
     biased = True
+    carrier_key = "vals"
 
     def __init__(self, fraction=0.01):
         self.fraction = fraction
         self.name = f"topk{fraction:g}"
 
-    def compress(self, rng, x):
+    def encode(self, state, rng, x):
         n = x.shape[0]
         k = _k(n, self.fraction)
         vals, idx = jax.lax.top_k(jnp.abs(x), k)
-        return {"vals": x[idx], "idx": idx.astype(jnp.int32)}
+        return {"vals": x[idx], "idx": idx.astype(jnp.int32)}, state
 
-    def decompress(self, payload, n):
+    def decode(self, payload, n):
         out = jnp.zeros((n,), jnp.float32)
         return out.at[payload["idx"]].set(payload["vals"].astype(jnp.float32))
 
-    def wire_bits(self, n):
-        return _k(n, self.fraction) * (32.0 + 32.0)
+    def carrier_len(self, n):
+        return _k(n, self.fraction)
 
-    def entropy_bits(self, n):
+    def meta_bits(self, n):
+        return _k(n, self.fraction) * 32.0       # int32 indices
+
+    def meta_entropy_bits(self, n):
         k = _k(n, self.fraction)
         idx_bits = math.log2(max(n / k, 2.0)) + 2      # Golomb-coded gaps
-        return k * (32.0 + idx_bits)
+        return k * idx_bits
 
 
-class STC(Compressor):
-    """Sattler et al. [39]: top-k + ternarisation (±mu)."""
+class Ternary(CommTransform):
+    """Ternarisation to ±mean(|x|) — STC's quantizer, as a chainable stage."""
     biased = True
+    name = "ternary"
 
-    def __init__(self, fraction=0.01):
-        self.fraction = fraction
-        self.name = f"stc{fraction:g}"
+    def encode(self, state, rng, x):
+        mu = jnp.abs(x).mean()
+        return {"mu": mu, "sign": jnp.sign(x).astype(jnp.int8)}, state
 
-    def compress(self, rng, x):
-        n = x.shape[0]
-        k = _k(n, self.fraction)
-        mag, idx = jax.lax.top_k(jnp.abs(x), k)
-        mu = mag.mean()
-        return {"mu": mu, "idx": idx.astype(jnp.int32),
-                "sign": jnp.sign(x[idx]).astype(jnp.int8)}
+    def decode(self, payload, n):
+        return payload["sign"].astype(jnp.float32) * payload["mu"]
 
-    def decompress(self, payload, n):
-        out = jnp.zeros((n,), jnp.float32)
-        vals = payload["sign"].astype(jnp.float32) * payload["mu"]
-        return out.at[payload["idx"]].set(vals)
+    def meta_bits(self, n):
+        return 8.0 * n + 32.0                    # int8 signs + f32 mu
 
-    def wire_bits(self, n):
-        return _k(n, self.fraction) * (32.0 + 8.0) + 32.0
-
-    def entropy_bits(self, n):
-        k = _k(n, self.fraction)
-        idx_bits = math.log2(max(n / k, 2.0)) + 2
-        return k * (idx_bits + 1.0) + 32.0
+    def meta_entropy_bits(self, n):
+        return 1.0 * n + 32.0                    # 1 bit/sign after packing
 
 
-class SBC(Compressor):
+class SBC(CommTransform):
     """Sattler et al. [69]: binary — keep only the dominant sign's support."""
     biased = True
 
@@ -91,7 +89,7 @@ class SBC(Compressor):
         self.fraction = fraction
         self.name = f"sbc{fraction:g}"
 
-    def compress(self, rng, x):
+    def encode(self, state, rng, x):
         n = x.shape[0]
         k = _k(n, self.fraction)
         mag, idx = jax.lax.top_k(jnp.abs(x), k)
@@ -103,26 +101,27 @@ class SBC(Compressor):
         mu = jnp.sum(jnp.abs(v) * keep) / jnp.maximum(keep.sum(), 1)
         # drop the minority-sign entries (their index slot points to 0 weight)
         idx = jnp.where(keep, idx, n)              # n => scatter-dropped
-        return {"mu": mu * s, "idx": idx.astype(jnp.int32)}
+        return {"mu": mu * s, "idx": idx.astype(jnp.int32)}, state
 
-    def decompress(self, payload, n):
+    def decode(self, payload, n):
         out = jnp.zeros((n + 1,), jnp.float32)
         out = out.at[payload["idx"]].set(payload["mu"])
         return out[:n]
 
-    def wire_bits(self, n):
+    def meta_bits(self, n):
         return _k(n, self.fraction) * 32.0 + 32.0
 
-    def entropy_bits(self, n):
+    def meta_entropy_bits(self, n):
         k = _k(n, self.fraction)
         idx_bits = math.log2(max(n / k, 2.0)) + 2
         return k * idx_bits + 32.0
 
 
-class RandMask(Compressor):
+class RandMask(CommTransform):
     """CPFed [68]: random-mask sparsifier (unbiased, 1/p rescale) with optional
     Gaussian noise on survivors (differential privacy)."""
     biased = False
+    carrier_key = "vals"
 
     def __init__(self, fraction=0.05, dp_sigma=0.0):
         self.fraction = fraction
@@ -136,26 +135,46 @@ class RandMask(Compressor):
         _, idx = jax.lax.top_k(scores, k)
         return idx
 
-    def compress(self, rng, x):
+    def encode(self, state, rng, x):
         n = x.shape[0]
         seed, noise = jax.random.split(rng)
         idx = self._idx(seed, n)
         vals = x[idx] / self.fraction
         if self.dp_sigma:
             vals = vals + self.dp_sigma * jax.random.normal(noise, vals.shape)
-        return {"vals": vals, "seed": seed}
+        return {"vals": vals, "seed": seed}, state
 
-    def decompress(self, payload, n):
+    def decode(self, payload, n):
         idx = self._idx(payload["seed"], n)
         out = jnp.zeros((n,), jnp.float32)
         return out.at[idx].set(payload["vals"].astype(jnp.float32))
 
-    def wire_bits(self, n):
+    def carrier_len(self, n):
+        return _k(n, self.fraction)
+
+    def meta_bits(self, n):
         # indices are regenerated from the 64-bit seed — only values travel
-        return _k(n, self.fraction) * 32.0 + 64.0
+        return 64.0
+
+
+def _stc(fraction=0.01):
+    from repro.compress.pipeline import chain
+    return chain(TopK(fraction), Ternary())
 
 
 register("topk")(lambda fraction=0.01, **kw: TopK(fraction))
-register("stc")(lambda fraction=0.01, **kw: STC(fraction))
+register("stc")(lambda fraction=0.01, **kw: _stc(fraction))
 register("sbc")(lambda fraction=0.01, **kw: SBC(fraction))
-register("randmask")(lambda fraction=0.05, dp_sigma=0.0, **kw: RandMask(fraction, dp_sigma))
+register("randmask")(lambda fraction=0.05, dp_sigma=0.0, **kw:
+                     RandMask(fraction, dp_sigma))
+
+register_stage("topk")(lambda frac=None, fraction=0.01, **kw:
+                       TopK(float(frac if frac is not None else fraction)))
+register_stage("ternary")(lambda **kw: Ternary())
+register_stage("stc")(lambda frac=None, fraction=0.01, **kw:
+                      _stc(float(frac if frac is not None else fraction)))
+register_stage("sbc")(lambda frac=None, fraction=0.01, **kw:
+                      SBC(float(frac if frac is not None else fraction)))
+register_stage("randmask")(lambda frac=None, fraction=0.05, dp_sigma=0.0, **kw:
+                           RandMask(float(frac if frac is not None
+                                          else fraction), dp_sigma))

@@ -1,0 +1,32 @@
+"""Version-compat shims for the jax APIs this repo rides.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (where its
+replication check is spelled ``check_rep``) to top-level ``jax.shard_map``
+(where it is spelled ``check_vma``). The repo targets the new spelling; on
+older jax we fall back to the experimental module and translate the kwarg.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kw)
+
+
+def make_mesh(axis_shapes, axis_names, **kw):
+    """``jax.make_mesh`` with explicit-Auto axis types on jax versions that
+    have ``jax.sharding.AxisType``; plain mesh (always Auto) on older ones."""
+    if hasattr(jax.sharding, "AxisType"):
+        kw.setdefault("axis_types",
+                      (jax.sharding.AxisType.Auto,) * len(axis_names))
+        return jax.make_mesh(axis_shapes, axis_names, **kw)
+    kw.pop("axis_types", None)
+    return jax.make_mesh(axis_shapes, axis_names, **kw)

@@ -2,7 +2,9 @@
 
   local updating (FedAvg E epochs / FedSGD / FedProx / SCAFFOLD)
   -> client selection (all / random / power-of-choice / multi-criteria)
-  -> compressed shard_map aggregation (+ error feedback)
+  -> compressed shard_map aggregation (CommPipeline, state threaded
+     through FLState.comm_state — error feedback / DGC momentum are
+     wrapping transforms owned by the pipeline, not this trainer)
   -> server optimizer (FedAvg / FedAvgM / FedAdam / FedYogi)
   -> communication ledger
 
@@ -23,7 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compress.api import make_compressor, Identity
+from repro.compress.api import Identity, make_compressor
+from repro.compress.pipeline import error_feedback, momentum_correction
 from repro.core import aggregation, selection as sel, server_opt
 from repro.core.types import ArchConfig, CommLedger, FLConfig, FLState
 from repro.models import sharding as shd
@@ -36,10 +39,23 @@ PyTree = Any
 # Static ledger terms (bits per selected client per round)
 # ---------------------------------------------------------------------------
 
-def ledger_terms(model: Model, fl: FLConfig):
+def uplink_pipeline(fl: FLConfig):
+    """The uplink CommPipeline from config: the spec string (legacy name or
+    ``"a:x>>b:y"`` chain) plus the stateful correction wrapper — DGC momentum
+    correction if ``dgc_momentum`` is set, else error feedback for biased
+    pipelines. Wrappers leave wire/entropy bits unchanged."""
     up = make_compressor(fl.uplink_compressor, fraction=fl.topk_fraction,
                          block=fl.qsgd_block, rows=fl.sketch_rows,
                          cols=fl.sketch_cols)
+    if fl.dgc_momentum > 0.0 and not up.is_identity:
+        up = momentum_correction(up, fl.dgc_momentum)
+    elif up.biased and fl.error_feedback:
+        up = error_feedback(up)
+    return up
+
+
+def ledger_terms(model: Model, fl: FLConfig):
+    up = uplink_pipeline(fl)
     down = make_compressor(fl.downlink_compressor, block=fl.qsgd_block)
     sizes = [int(np.prod(d.shape)) for d in
              jax.tree.leaves(model.defs, is_leaf=lambda x: hasattr(x, "logical"))]
@@ -131,16 +147,18 @@ def make_fl_train_step(model: Model, fl: FLConfig, mesh: Mesh,
     C = int(np.prod([dict(mesh.shape)[a] for a in axes])) if axes else 1
     client_p = P(axes) if axes else P()
 
-    pspecs = shd.tree_specs(model.abstract_params(), model.logical_axes(),
+    abs_params = model.abstract_params()
+    pspecs = shd.tree_specs(abs_params, model.logical_axes(),
                             mesh, cfg.fsdp)
     terms, up_comp, down_comp = ledger_terms(model, fl)
     aggregate = aggregation.make_aggregator(mesh, pspecs, up_comp,
-                                            cfg.client_axis)
+                                            cfg.client_axis,
+                                            abstract_params=abs_params)
     agg_ctrl = (aggregation.make_aggregator(mesh, pspecs, Identity(),
                                             cfg.client_axis)
                 if fl.algorithm == "scaffold" else None)
     scaffold = fl.algorithm == "scaffold"
-    ef = up_comp.biased
+    stateful = up_comp.stateful
 
     # --- shardings ----------------------------------------------------------
     def _shard(spec_tree):
@@ -154,7 +172,9 @@ def make_fl_train_step(model: Model, fl: FLConfig, mesh: Mesh,
                           for k in server_opt.state_keys(fl.server_opt)},
         control=pspecs if scaffold else None,
         client_controls=clientful if scaffold else None,
-        ef_residual=clientful if ef else None,
+        comm_state=(aggregation.comm_state_specs(up_comp, abs_params, pspecs,
+                                                 axes)
+                    if stateful else None),
         rng=P(), round=P(),
     )
 
@@ -170,7 +190,8 @@ def make_fl_train_step(model: Model, fl: FLConfig, mesh: Mesh,
             server_opt_state=server_opt.init_state(fl.server_opt, params),
             control=zerosf32() if scaffold else None,
             client_controls=zeros_clientful() if scaffold else None,
-            ef_residual=zeros_clientful() if ef else None,
+            comm_state=(aggregation.comm_state_init(up_comp, params, C)
+                        if stateful else None),
             rng=jax.random.PRNGKey(fl.seed),
             round=jnp.zeros((), jnp.int32),
         )
@@ -181,7 +202,7 @@ def make_fl_train_step(model: Model, fl: FLConfig, mesh: Mesh,
 
         # downlink (LFL): clients train from a quantised global model
         params = state.params
-        if not isinstance(down_comp, Identity):
+        if not down_comp.is_identity:
             flatp = jax.tree.map(lambda p: p.reshape(-1).astype(jnp.float32),
                                  params)
             params = jax.tree.map(
@@ -212,9 +233,9 @@ def make_fl_train_step(model: Model, fl: FLConfig, mesh: Mesh,
                              resources=resources, sizes=sizes)
         n_sel = (weights > 0).sum().astype(jnp.float32)
 
-        # compressed aggregation over the wire
-        agg_delta, new_resid = aggregate(deltas, weights, r_up,
-                                         state.ef_residual)
+        # compressed aggregation over the wire (pipeline state rides along)
+        agg_delta, new_comm = aggregate(deltas, weights, r_up,
+                                        state.comm_state)
         if scaffold:
             # unselected clients keep their control variate
             selmask = (weights > 0).astype(jnp.float32)
@@ -248,7 +269,7 @@ def make_fl_train_step(model: Model, fl: FLConfig, mesh: Mesh,
         }
         new_state = FLState(
             params=new_params, server_opt_state=new_sos, control=control,
-            client_controls=new_ci, ef_residual=new_resid,
+            client_controls=new_ci, comm_state=new_comm,
             rng=r_next, round=state.round + 1,
         )
         return new_state, metrics

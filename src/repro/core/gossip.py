@@ -24,12 +24,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compress.api import Identity, make_compressor
+from repro.compress.api import make_compressor
 from repro.core.types import FLConfig
 from repro.models import sharding as shd
 from repro.models.model import Model
 
-shard_map = jax.shard_map
+from repro.core.compat import shard_map
 
 
 @dataclasses.dataclass
@@ -60,12 +60,12 @@ def make_gossip_step(model: Model, fl: FLConfig, mesh: Mesh,
             for li, leaf in enumerate(jax.tree.leaves(ptree)):
                 flat = leaf.reshape(-1).astype(jnp.float32)
                 r = jax.random.fold_in(rng, li)
-                payload = comp.compress(r, flat)
+                payload, _ = comp.encode(comp.init(flat.shape), r, flat)
                 left = jax.lax.ppermute(payload, "data", fwd)
                 right = jax.lax.ppermute(payload, "data", bwd)
                 n = flat.shape[0]
-                mixed = 0.5 * flat + 0.25 * (comp.decompress(left, n)
-                                             + comp.decompress(right, n))
+                mixed = 0.5 * flat + 0.25 * (comp.decode(left, n)
+                                             + comp.decode(right, n))
                 out.append(mixed.reshape(leaf.shape).astype(leaf.dtype))
             return jax.tree.unflatten(jax.tree.structure(ptree), out)
         return shard_map(body, mesh=mesh, in_specs=(cspecs,),

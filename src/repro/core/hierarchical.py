@@ -27,13 +27,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compress.api import Identity, make_compressor
+from repro.compress.api import make_compressor
 from repro.core import server_opt
 from repro.core.types import CommLedger, FLConfig
 from repro.models import sharding as shd
 from repro.models.model import Model
 
-shard_map = jax.shard_map
+from repro.core.compat import shard_map
 PyTree = Any
 
 
@@ -84,14 +84,14 @@ def make_hier_fl_train_step(model: Model, fl: FLConfig, mesh: Mesh,
                 flat = leaf.reshape(-1).astype(jnp.float32)
                 r = jax.random.fold_in(jax.random.fold_in(rng, li),
                                        gi * Ce + ci)
-                if isinstance(up, Identity):
+                if up.is_identity:
                     contrib = w[gi, ci] * flat
                     edge = jax.lax.psum(contrib, "data") / \
                         jnp.maximum(jax.lax.psum(w[gi, ci], "data"), 1e-9)
                 else:
-                    payload = up.compress(r, flat)
+                    payload, _ = up.encode(up.init(flat.shape), r, flat)
                     gath = jax.lax.all_gather(payload, "data")
-                    dec = jax.vmap(lambda q: up.decompress(q, flat.shape[0]))(gath)
+                    dec = jax.vmap(lambda q: up.decode(q, flat.shape[0]))(gath)
                     wrow = w[gi]
                     edge = (wrow[:, None] * dec).sum(0) / \
                         jnp.maximum(wrow.sum(), 1e-9)
@@ -110,13 +110,14 @@ def make_hier_fl_train_step(model: Model, fl: FLConfig, mesh: Mesh,
             for li, leaf in enumerate(jax.tree.leaves(ptree)):
                 flat = leaf.reshape(-1).astype(jnp.float32)
                 r = jax.random.fold_in(rng, li)
-                if isinstance(pod_comp, Identity):
+                if pod_comp.is_identity:
                     synced = jax.lax.pmean(flat, "pod")
                 else:
-                    pay = pod_comp.compress(
+                    pay, _ = pod_comp.encode(
+                        pod_comp.init(flat.shape),
                         jax.random.fold_in(r, jax.lax.axis_index("pod")), flat)
                     gath = jax.lax.all_gather(pay, "pod")
-                    dec = jax.vmap(lambda q: pod_comp.decompress(
+                    dec = jax.vmap(lambda q: pod_comp.decode(
                         q, flat.shape[0]))(gath)
                     synced = dec.mean(0)
                 out.append(synced.reshape(leaf.shape).astype(leaf.dtype))

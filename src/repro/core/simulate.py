@@ -17,8 +17,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.compress.api import Identity, make_compressor
 from repro.core import selection as sel, server_opt
+from repro.core.aggregation import comm_state_init
 from repro.core.federated import _client_update, ledger_terms
 from repro.core.types import CommLedger, FLConfig, FLState
 from repro.models.model import Model
@@ -37,7 +37,7 @@ def make_sim_step(model: Model, fl: FLConfig, n_clients: int,
     C = n_clients
     terms, up, down = ledger_terms(model, fl)
     scaffold = fl.algorithm == "scaffold"
-    ef = up.biased
+    stateful = up.stateful
 
     def init_fn(rng):
         params = model.init(rng)
@@ -50,7 +50,7 @@ def make_sim_step(model: Model, fl: FLConfig, n_clients: int,
             server_opt_state=server_opt.init_state(fl.server_opt, params),
             control=zf() if scaffold else None,
             client_controls=zc() if scaffold else None,
-            ef_residual=zc() if ef else None,
+            comm_state=comm_state_init(up, params, C) if stateful else None,
             rng=jax.random.PRNGKey(fl.seed),
             round=jnp.zeros((), jnp.int32),
             prev_delta=zf() if fl.cmfl_threshold > 0 else None,
@@ -60,7 +60,7 @@ def make_sim_step(model: Model, fl: FLConfig, n_clients: int,
         rng, r_down, r_sel, r_up, r_next = jax.random.split(state.rng, 5)
 
         params = state.params
-        if not isinstance(down, Identity):
+        if not down.is_identity:
             params = jax.tree.map(
                 lambda p: down.roundtrip(r_down, p.reshape(-1).astype(
                     jnp.float32)).reshape(p.shape).astype(p.dtype), params)
@@ -112,29 +112,30 @@ def make_sim_step(model: Model, fl: FLConfig, n_clients: int,
         n_sel = (weights > 0).sum().astype(jnp.float32)
         wsum = jnp.maximum(weights.sum(), 1e-9)
 
-        # compress each client's leaf, decompress, weighted mean (+ EF)
-        agg, new_resid = {}, {}
+        # encode each client's leaf, decode, weighted mean — the pipeline
+        # owns its correction state (EF residual / DGC momentum), vmapped
+        # over clients alongside the deltas
         d_leaves, dtree = jax.tree.flatten(deltas)
-        r_leaves = jax.tree.leaves(state.ef_residual) if ef else \
-            [None] * len(d_leaves)
-        agg_leaves, res_leaves = [], []
-        for li, (leaf, resid) in enumerate(zip(d_leaves, r_leaves)):
+        agg_leaves, st_leaves = [], []
+        for li, leaf in enumerate(d_leaves):
             shape = leaf.shape[1:]
             flat = leaf.reshape(C, -1).astype(jnp.float32)
-            if ef:
-                flat = flat + resid.reshape(C, -1)
-
-            def one(x, r):
-                payload = up.compress(r, x)
-                return up.decompress(payload, x.shape[0])
             rs = jax.vmap(lambda r: jax.random.fold_in(r, li))(rngs)
-            dec = jax.vmap(one)(flat, rs)
+            if stateful:
+                def one(x, r, st):
+                    payload, nst = up.encode(st, r, x)
+                    return up.decode(payload, x.shape[0]), nst
+                dec, nst = jax.vmap(one)(flat, rs, state.comm_state[li])
+                st_leaves.append(nst)
+            else:
+                def one(x, r):
+                    payload, _ = up.encode(up.init(x.shape), r, x)
+                    return up.decode(payload, x.shape[0])
+                dec = jax.vmap(one)(flat, rs)
             agg_leaves.append(((weights[:, None] * dec).sum(0) / wsum)
                               .reshape(shape))
-            if ef:
-                res_leaves.append((flat - dec).reshape((C,) + shape))
         agg = jax.tree.unflatten(dtree, agg_leaves)
-        new_resid = jax.tree.unflatten(dtree, res_leaves) if ef else None
+        new_comm = tuple(st_leaves) if stateful else None
 
         if scaffold:
             selmask = (weights > 0).astype(jnp.float32)
@@ -166,7 +167,7 @@ def make_sim_step(model: Model, fl: FLConfig, n_clients: int,
         new_prev = agg if fl.cmfl_threshold > 0 else None
         return FLState(params=new_params, server_opt_state=new_sos,
                        control=control, client_controls=new_ci,
-                       ef_residual=new_resid, rng=r_next,
+                       comm_state=new_comm, rng=r_next,
                        round=state.round + 1, prev_delta=new_prev), metrics
 
     return SimFL(init_fn=init_fn, step_fn=jax.jit(step_fn),

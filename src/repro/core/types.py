@@ -179,14 +179,18 @@ class FLConfig:
     # threshold do not upload this round (0 = off). Simulation path.
     cmfl_threshold: float = 0.0
 
-    # §III.B.5 compression
-    uplink_compressor: str = "none"   # none|qsgd8|qsgd4|topk|stc|sbc|sketch|hsq|randmask
+    # §III.B.5 compression — a CommPipeline spec: a legacy registry name
+    # (none|qsgd8|qsgd4|topk|stc|sbc|sketch|hsq|randmask) or a chained spec
+    # string like "topk:0.01>>qsgd:8" (DESIGN.md §3). STC *is*
+    # "topk>>ternary"; DGC is "topk" + dgc_momentum.
+    uplink_compressor: str = "none"
     downlink_compressor: str = "none" # none|lfl8 (LFL: quantized global broadcast)
     topk_fraction: float = 0.01
     sketch_rows: int = 5
     sketch_cols: int = 4096
     qsgd_block: int = 2048            # per-block scale granularity
-    error_feedback: bool = True       # EF residual for biased compressors
+    error_feedback: bool = True       # wrap biased pipelines in error_feedback()
+    dgc_momentum: float = 0.0         # >0: wrap in momentum_correction() (DGC)
 
     # §III.B.2 client selection
     selection: str = "all"            # all | random | power_of_choice | multi_criteria
@@ -224,7 +228,9 @@ class FLState:
     server_opt_state: PyTree
     control: PyTree | None            # SCAFFOLD global control variate c
     client_controls: PyTree | None    # SCAFFOLD per-client c_i   (C leading dim)
-    ef_residual: PyTree | None        # error-feedback residuals  (C leading dim)
+    comm_state: PyTree | None         # CommPipeline state (EF residual, DGC
+                                      # momentum, ...) — tuple over param
+                                      # leaves, C leading dim on every array
     rng: jax.Array
     round: jax.Array                  # int32 scalar
     prev_delta: PyTree | None = None  # CMFL relevance reference (last global

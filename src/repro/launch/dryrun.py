@@ -58,6 +58,15 @@ FL_VARIANTS = {
     "hier": FLConfig(algorithm="fedavg", local_steps=1, hierarchical=True,
                      uplink_compressor="none", pod_compressor="qsgd8",
                      sync_every=4),
+    # combined-scheme pipeline (CommPipeline tentpole): top-k support with
+    # QSGD-quantised values — strictly fewer wire bytes than either stage
+    # alone; EF residual rides in FLState.comm_state
+    "topk_qsgd": FLConfig(algorithm="fedsgd", local_steps=1,
+                          uplink_compressor="topk:0.01>>qsgd:8"),
+    # DGC: momentum-corrected sparsification (momentum_correction wrapper)
+    "dgc": FLConfig(algorithm="fedsgd", local_steps=1,
+                    uplink_compressor="topk", topk_fraction=0.01,
+                    dgc_momentum=0.9),
     # beyond-paper: uncompressed but bf16 deltas on the wire
     "bf16delta": FLConfig(algorithm="fedsgd", local_steps=1,
                           uplink_compressor="none", delta_dtype="bf16"),
@@ -286,6 +295,8 @@ def run_one(arch: str, shape_name: str, mesh_name: str, fl_name: str,
             "peak_gb": getattr(mem, "peak_memory_in_bytes", 0) / 1e9,
         }
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):       # pre-0.5 jax returns [dict]
+            ca = ca[0] if ca else {}
         rec["xla_cost"] = {"flops": ca.get("flops", 0.0),
                            "bytes": ca.get("bytes accessed", 0.0)}
 

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (data=FL clients, model=TP) or 2x16x16 two-pod
@@ -17,9 +19,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-                         devices=jax.devices()[:n])
+    return make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
 def make_host_mesh(model: int = 1, data: int | None = None, pod: int = 1):
@@ -29,5 +29,4 @@ def make_host_mesh(model: int = 1, data: int | None = None, pod: int = 1):
         data = n // (model * pod)
     shape = (pod, data, model) if pod > 1 else (data, model)
     axes = ("pod", "data", "model") if pod > 1 else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

@@ -10,6 +10,7 @@ import jax                                                      # noqa: E402
 import jax.numpy as jnp                                         # noqa: E402
 import numpy as np                                              # noqa: E402
 
+from repro.core.compat import make_mesh                        # noqa: E402
 from repro.core.types import ArchConfig, FLConfig               # noqa: E402
 from repro.core.federated import make_fl_train_step             # noqa: E402
 from repro.core.hierarchical import make_hier_fl_train_step     # noqa: E402
@@ -27,13 +28,11 @@ def tiny_cfg(**kw):
 
 
 def mesh3():
-    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def mesh2():
-    return jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((4, 2), ("data", "model"))
 
 
 def make_batch(cfg, C, B, S, key):
@@ -186,6 +185,48 @@ def case_hier_and_gossip():
         cons.append(float(m["consensus"]))
     assert cons[-1] < cons[0] * 0.7, cons
     print("case_hier_and_gossip OK", divs, cons[:3])
+
+
+def case_pipeline_chain_agg():
+    """Tentpole: a chained CommPipeline ("topk:0.01>>qsgd:8") through the
+    shard_map aggregator — state (EF residual) threads via FLState.comm_state,
+    loss converges, and the chained ledger beats either stage alone."""
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    mesh = mesh2()
+
+    def run(comp, rounds=3, **kw):
+        fl = FLConfig(algorithm="fedsgd", local_steps=1, local_lr=0.05,
+                      uplink_compressor=comp, topk_fraction=0.01, **kw)
+        step = make_fl_train_step(model, fl, mesh, chunk=16)
+        state = step.init_fn(jax.random.PRNGKey(0))
+        batch = make_batch(cfg, step.n_clients, 2, 16, jax.random.PRNGKey(1))
+        jstep = jax.jit(step.step_fn)
+        losses = []
+        for _ in range(rounds):
+            state, m = jstep(state, batch)
+            losses.append(float(m["loss_all"]))
+        return state, m, losses
+
+    state, m, losses = run("topk:0.01>>qsgd:8")
+    assert state.comm_state is not None          # EF residual in pipeline state
+    res_norm = sum(float(jnp.abs(a).sum()) for st in state.comm_state
+                   for a in jax.tree.leaves(st))
+    assert res_norm > 0.0, "EF residual should be nonzero after a round"
+    assert all(np.isfinite(losses)) and losses[-1] < losses[0] + 0.05, losses
+
+    chain_wire = float(m["ledger"].uplink_wire)
+    topk_wire = float(run("topk", rounds=1)[1]["ledger"].uplink_wire)
+    qsgd_wire = float(run("qsgd8", rounds=1)[1]["ledger"].uplink_wire)
+    assert chain_wire < topk_wire and chain_wire < qsgd_wire, \
+        (chain_wire, topk_wire, qsgd_wire)
+
+    # DGC: momentum-corrected sparsification also threads state end-to-end
+    state, m, losses = run("topk", dgc_momentum=0.9)
+    assert state.comm_state is not None
+    assert all(np.isfinite(losses)), losses
+    print("case_pipeline_chain_agg OK",
+          {"chain": chain_wire, "topk": topk_wire, "qsgd8": qsgd_wire})
 
 
 def case_noniid_data_pipeline():

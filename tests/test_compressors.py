@@ -1,9 +1,21 @@
-"""Property-based tests of the compression substrate (hypothesis)."""
+"""Property-based tests of the compression substrate.
+
+Fuzzed properties use ``hypothesis`` when it is installed; without it each
+fuzzed test degrades to a fixed-seed parametrized sweep so the core
+round-trip/error-bound assertions still run (the CI image pins hypothesis,
+minimal images may not have it).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    import hypothesis  # noqa: F401 — probe only; see `fuzz` below
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.compress import make_compressor
 from repro.compress.sketch import sketch, unsketch
@@ -11,6 +23,25 @@ from repro.compress.sketch import sketch, unsketch
 ALL = ["none", "qsgd8", "qsgd4", "uveq", "hsq", "topk", "stc", "sbc",
        "randmask", "sketch"]
 UNBIASED = ["none", "qsgd8", "qsgd4", "uveq", "randmask"]
+
+
+def fuzz(*strategies, fallback, max_examples=20):
+    """``@given(*strategies)`` under hypothesis; fixed-example parametrize
+    otherwise. ``fallback`` is a list of argument tuples."""
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(*strategies)(fn))
+        nargs = fn.__code__.co_argcount
+        argnames = ",".join(fn.__code__.co_varnames[:nargs])
+        vals = [t[0] for t in fallback] if nargs == 1 else fallback
+        return pytest.mark.parametrize(argnames, vals)(fn)
+    return deco
+
+
+def _st(builder):
+    """Build a strategy lazily so module import never touches hypothesis."""
+    return builder() if HAVE_HYPOTHESIS else None
 
 
 def _x(seed, n, scale):
@@ -79,8 +110,8 @@ def test_sbc_single_sign():
     assert len(np.unique(nz)) == 1  # one signed magnitude only
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2**31 - 1), st.floats(0.1, 10.0))
+@fuzz(_st(lambda: st.integers(0, 2**31 - 1)), _st(lambda: st.floats(0.1, 10.0)),
+      fallback=[(0, 0.1), (1, 1.0), (7, 3.3), (123, 10.0), (999, 0.5)])
 def test_qsgd_error_bounded_by_block_scale(seed, scale):
     """|x - Q(x)| <= scale_block / levels per coordinate (QSGD guarantee)."""
     comp = make_compressor("qsgd8", block=128)
@@ -93,8 +124,8 @@ def test_qsgd_error_bounded_by_block_scale(seed, scale):
         assert np.abs(errb[b]).max() <= bound + 1e-5
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(0, 10_000))
+@fuzz(_st(lambda: st.integers(0, 10_000)),
+      fallback=[(0,), (17,), (512,), (4095,), (9999,)], max_examples=15)
 def test_sketch_linearity(seed):
     """sketch(a + b) == sketch(a) + sketch(b) — what lets FetchSGD aggregate
     sketches server-side."""
@@ -123,8 +154,8 @@ def test_error_feedback_contraction():
     assert max(norms[10:]) < 3.0 * np.mean(norms[:5])
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(2, 64))
+@fuzz(_st(lambda: st.integers(2, 64)),
+      fallback=[(2,), (5,), (13,), (40,), (64,)], max_examples=10)
 def test_randmask_deterministic_given_seed(k):
     comp = make_compressor("randmask", fraction=0.2)
     x = _x(k, 256, 1.0)

@@ -1,0 +1,241 @@
+"""CommPipeline API tests: composition round-trips, the wire-bit composition
+law, spec-string parsing, backward-compat of legacy registry names, and the
+stateful wrapping transforms (error feedback / DGC momentum correction)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import (Identity, chain, error_feedback,
+                            make_compressor, momentum_correction)
+from repro.compress.pipeline import Chain
+from repro.compress.quantization import QSGD
+from repro.compress.sparsification import Ternary, TopK
+
+
+def _x(seed, n, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+
+
+def _tree(seed, shapes):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return {f"leaf{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+# ---------------------------------------------------------------------------
+# composition round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    "topk:0.01>>qsgd:8",
+    "topk:0.1>>ternary",
+    "randmask:0.1>>qsgd:8",
+    "sketch>>qsgd:8",
+    "topk:0.05>>qsgd:4",
+])
+def test_chain_roundtrip_random_pytrees(spec):
+    pipe = make_compressor(spec, cols=256)
+    tree = _tree(0, [(1000,), (64, 32), (7, 11, 3)])
+    for i, leaf in enumerate(jax.tree.leaves(tree)):
+        flat = leaf.reshape(-1)
+        y = pipe.roundtrip(jax.random.fold_in(jax.random.PRNGKey(1), i), flat)
+        assert y.shape == flat.shape
+        assert y.dtype == jnp.float32
+        assert bool(jnp.isfinite(y).all()), spec
+
+
+def test_chain_topk_qsgd_approximates_topk():
+    """The quantized-sparse chain must stay close to plain top-k: support is
+    identical and values differ by at most the QSGD block bound."""
+    n = 4096
+    x = _x(0, n, 2.0)
+    topk = make_compressor("topk", fraction=0.05)
+    pipe = make_compressor("topk:0.05>>qsgd:8")
+    y_topk = np.asarray(topk.roundtrip(jax.random.PRNGKey(1), x))
+    y_pipe = np.asarray(pipe.roundtrip(jax.random.PRNGKey(1), x))
+    assert ((y_topk != 0) == (y_pipe != 0)).all()       # same support
+    bound = np.abs(y_topk).max() / 127 + 1e-5           # QSGD per-block bound
+    assert np.abs(y_pipe - y_topk).max() <= bound
+
+
+def test_chain_stc_equals_legacy_stc_semantics():
+    """'stc' resolves to chain(topk, ternary) and keeps the monolithic
+    compressor's exact reconstruction: ternary levels on the top-k support."""
+    pipe = make_compressor("stc", fraction=0.1)
+    assert isinstance(pipe, Chain)
+    x = _x(4, 1000, 3.0)
+    y = np.asarray(pipe.roundtrip(jax.random.PRNGKey(0), x))
+    nz = y[y != 0]
+    assert len(np.unique(np.abs(nz))) == 1              # single magnitude mu
+    k = 100
+    mag = np.sort(np.abs(np.asarray(x)))[-k:]
+    np.testing.assert_allclose(np.abs(nz)[0], mag.mean(), rtol=1e-5)
+
+
+def test_identity_is_chain_unit():
+    q = QSGD(8)
+    assert chain(Identity(), q) is q
+    assert chain(q, ) is q
+    assert chain(Identity(), Identity()).is_identity
+    c = chain(TopK(0.1), chain(Identity(), Ternary()))
+    assert isinstance(c, Chain) and len(c.stages) == 2
+
+
+def test_terminal_stage_cannot_be_chained():
+    with pytest.raises(ValueError):
+        chain(QSGD(8), TopK(0.1))       # qsgd has no carrier
+
+
+# ---------------------------------------------------------------------------
+# wire-bit composition law
+# ---------------------------------------------------------------------------
+
+def test_wire_bits_composition_law():
+    """On sparse supports the chained wire is strictly below either stage
+    alone, and equals meta(topk) + qsgd's bits on the k-length carrier."""
+    n = 1 << 20
+    topk = make_compressor("topk", fraction=0.01)
+    qsgd = make_compressor("qsgd8")
+    pipe = make_compressor("topk:0.01>>qsgd:8")
+    k = max(1, round(n * 0.01))
+    assert pipe.wire_bits(n) == topk.meta_bits(n) + qsgd.wire_bits(k)
+    assert pipe.wire_bits(n) < topk.wire_bits(n)
+    assert pipe.wire_bits(n) < qsgd.wire_bits(n)
+    assert pipe.entropy_bits(n) <= pipe.wire_bits(n)
+
+
+def test_wire_bits_legacy_names_unchanged():
+    """Every pre-pipeline registry name must report the pre-pipeline wire/
+    entropy formulas, bit for bit (hard-coded from the flat-class era)."""
+    for n in (1 << 10, 1 << 16, 1 << 20):
+        nb = -(-n // 2048)
+        k1 = max(1, round(n * 0.01))
+        k5 = max(1, round(n * 0.05))
+        idx1 = math.log2(max(n / k1, 2.0)) + 2
+        legacy = [
+            ("none", {}, 32.0 * n, 32.0 * n),
+            ("qsgd8", {}, 8.0 * n + 32.0 * nb, 8.0 * n + 32.0 * nb),
+            ("qsgd4", {}, 8.0 * n + 32.0 * nb, 5.0 * n + 32.0 * nb),
+            ("lfl8", {}, 8.0 * n + 32.0 * nb, 8.0 * n + 32.0 * nb),
+            ("uveq", {}, 8.0 * n + 32.0 * nb + 32.0,
+             4.0 * n + 32.0 * nb + 32.0),
+            ("hsq", {}, 8.0 * n + 32.0 * nb, 1.0 * n + 32.0 * nb),
+            ("topk", dict(fraction=0.01), k1 * 64.0, k1 * (32.0 + idx1)),
+            ("stc", dict(fraction=0.01), k1 * 40.0 + 32.0,
+             k1 * (idx1 + 1.0) + 32.0),
+            ("sbc", dict(fraction=0.01), k1 * 32.0 + 32.0,
+             k1 * idx1 + 32.0),
+            ("randmask", dict(fraction=0.05), k5 * 32.0 + 64.0,
+             k5 * 32.0 + 64.0),
+        ]
+        for name, kw, wire, ent in legacy:
+            comp = make_compressor(name, **kw)
+            assert comp.wire_bits(n) == pytest.approx(wire), (name, n)
+            assert comp.entropy_bits(n) == pytest.approx(ent), (name, n)
+    # sketch: width adapts to n
+    comp = make_compressor("sketch", rows=5, cols=512)
+    n = 1 << 16
+    cols = int(min(512, max(8, n // 10)))
+    assert comp.wire_bits(n) == 32.0 * 5 * cols
+
+
+# ---------------------------------------------------------------------------
+# spec-string parsing
+# ---------------------------------------------------------------------------
+
+def test_spec_parsing():
+    p = make_compressor("topk:0.01>>qsgd:8")
+    assert p.name == "topk0.01>>qsgd8"
+    assert make_compressor("qsgd:4,128").block == 128
+    assert make_compressor("topk:0.02").fraction == 0.02
+    # kwargs supply defaults that positional stage args override
+    assert make_compressor("topk", fraction=0.03).fraction == 0.03
+    assert make_compressor("topk:0.5", fraction=0.03).fraction == 0.5
+    assert make_compressor(None).is_identity
+    assert make_compressor("none").is_identity
+    assert make_compressor("none>>qsgd:8").name == "qsgd8"
+    with pytest.raises(KeyError):
+        make_compressor("nope:3")
+    with pytest.raises(KeyError):
+        make_compressor("topk:0.01>>nope")
+
+
+def test_all_legacy_names_resolve():
+    for name in ["none", "qsgd8", "qsgd4", "lfl8", "uveq", "hsq", "topk",
+                 "stc", "sbc", "randmask", "sketch"]:
+        comp = make_compressor(name, fraction=0.05, cols=256)
+        y = comp.roundtrip(jax.random.PRNGKey(0), _x(0, 3000))
+        assert bool(jnp.isfinite(y).all()), name
+
+
+# ---------------------------------------------------------------------------
+# wrapping transforms: state ownership
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_state_threading():
+    """encode() must consume and return the residual; over rounds the EF'd
+    mean reconstruction approaches the mean input (bias correction)."""
+    n = 2048
+    pipe = error_feedback(make_compressor("topk", fraction=0.05))
+    assert pipe.stateful and not pipe.biased
+    st = pipe.init((n,))
+    assert st["residual"].shape == (n,)
+    x = _x(0, n)
+    acc = jnp.zeros((n,))
+    for t in range(40):
+        payload, st = pipe.encode(st, jax.random.PRNGKey(t), x)
+        acc = acc + pipe.decode(payload, n)
+    mean = acc / 40
+    rel = float(jnp.linalg.norm(mean - x) / jnp.linalg.norm(x))
+    assert rel < 0.25, rel                      # plain top-k@5% leaves ~0.95
+    # wire accounting is the inner pipeline's
+    inner = make_compressor("topk", fraction=0.05)
+    assert pipe.wire_bits(n) == inner.wire_bits(n)
+
+
+def test_error_feedback_state_is_leaf_shaped():
+    """Residuals must match the leaf shape they were init'd with (so they
+    shard like the parameter)."""
+    pipe = error_feedback(make_compressor("stc", fraction=0.1))
+    st = pipe.init((8, 16))
+    assert st["residual"].shape == (8, 16)
+    x = _x(1, 128)
+    payload, st2 = pipe.encode(st, jax.random.PRNGKey(0), x)
+    assert st2["residual"].shape == (8, 16)
+
+
+def test_momentum_correction_accumulates_unsent():
+    """DGC: with a constant input every coordinate is eventually transmitted
+    — the accumulated v forces small coordinates into the top-k."""
+    n = 512
+    pipe = momentum_correction(make_compressor("topk", fraction=0.05),
+                               momentum=0.0)    # isolate the accumulation
+    st = pipe.init((n,))
+    x = jnp.abs(_x(0, n)) + 0.1                 # strictly positive
+    sent = jnp.zeros((n,), bool)
+    for t in range(120):
+        payload, st = pipe.encode(st, jax.random.PRNGKey(t), x)
+        sent = sent | (pipe.decode(payload, n) != 0)
+    assert float(sent.mean()) > 0.95, float(sent.mean())
+
+
+def test_pipeline_jit_roundtrip():
+    """Chained encode/decode with state must jit cleanly (it runs inside the
+    shard_map aggregation in deployment)."""
+    n = 4096
+    pipe = error_feedback(make_compressor("topk:0.05>>qsgd:8"))
+    st = pipe.init((n,))
+
+    @jax.jit
+    def step(st, rng, x):
+        payload, st = pipe.encode(st, rng, x)
+        return pipe.decode(payload, n), st
+
+    x = _x(0, n)
+    y, st = step(st, jax.random.PRNGKey(0), x)
+    y2, st = step(st, jax.random.PRNGKey(1), x)
+    assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(y2).all())
+    assert float(jnp.abs(st["residual"]).sum()) > 0.0
