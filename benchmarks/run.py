@@ -8,9 +8,16 @@ Output: ``name,us_per_call,derived`` CSV (one row per configuration).
   kernels          Pallas kernels (interpret) vs jnp oracle timing
   convergence      §III.B.1  FedAvg vs FedProx vs SCAFFOLD on non-iid [46]
   bytes_to_loss    §III.B.5  loss-vs-cumulative-bytes: compression wins [39,45]
+  combined         §III.B.5  combined-scheme sweep: topk fraction x qsgd bits
+                   grid + sketch>>qsgd, bytes-to-target-loss (Pareto points)
   selection        §III.B.2  Power-of-Choice vs random [54]
   hierarchy        §III.B.3  flat vs hierarchical sync cost model [45,73]
+  engine           RoundEngine scan driver (run_rounds) vs Python round loop
   roofline         §Dry-run  per-arch roofline terms (reads experiments/)
+
+FL convergence benches run through the RoundEngine scan driver
+(``run_rounds``, chunk=8): batches are sampled and the held-out eval loss is
+computed *inside* the compiled scan, so a run pays one dispatch per chunk.
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only NAME] [--rounds N]``
 """
@@ -28,6 +35,7 @@ import numpy as np
 
 from repro.compress import make_compressor
 from repro.configs.registry import get_arch
+from repro.core.engine import run_rounds
 from repro.core.simulate import make_sim_step
 from repro.core.types import FLConfig
 from repro.data.synthetic import FedDataConfig, eval_batch, sample_round
@@ -101,7 +109,9 @@ def bench_kernels(rounds):
              note="interpret-mode-on-cpu")
 
 
-def _fl_run(fl: FLConfig, rounds, het=2.0, clients=8, seed=0):
+def _fl_run(fl: FLConfig, rounds, het=2.0, clients=8, seed=0, chunk=8):
+    """One simulated FL training run through the RoundEngine scan driver:
+    data sampling and the held-out eval both live inside the compiled scan."""
     cfg = get_arch("paper_lm")
     model = Model(cfg)
     dcfg = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=clients,
@@ -110,18 +120,42 @@ def _fl_run(fl: FLConfig, rounds, het=2.0, clients=8, seed=0):
     sim = make_sim_step(model, fl, clients, chunk=48)
     state = sim.init_fn(jax.random.PRNGKey(seed))
     ev = eval_batch(dcfg, jax.random.PRNGKey(99), batch_size=8)
-    losses, bytes_cum, t0 = [], [0.0], time.perf_counter()
-    evl = jax.jit(lambda p: model.loss(p, ev, chunk=48)[0])
-    for r in range(rounds):
-        batch = sample_round(dcfg, jax.random.fold_in(
+
+    def data_fn(r):
+        return sample_round(dcfg, jax.random.fold_in(
             jax.random.PRNGKey(seed + 1), r))
-        state, m = sim.step_fn(state, batch)
-        losses.append(float(evl(state.params)))
-        bytes_cum.append(bytes_cum[-1]
-                         + float(m["ledger"].uplink_wire)
-                         + float(m["ledger"].downlink_wire))
+
+    def metrics_fn(state, m):
+        m = dict(m)
+        m["eval_loss"] = model.loss(state.params, ev, chunk=48)[0]
+        return m
+
+    t0 = time.perf_counter()
+    state, ms = run_rounds(sim.engine, state, data_fn, rounds, chunk=chunk,
+                           metrics_fn=metrics_fn)
+    jax.block_until_ready(ms)
     us = (time.perf_counter() - t0) / rounds * 1e6
-    return losses, bytes_cum[1:], us
+    losses = [float(x) for x in ms["eval_loss"]]
+    per_round = (np.asarray(ms["ledger"].uplink_wire, np.float64)
+                 + np.asarray(ms["ledger"].downlink_wire, np.float64))
+    return losses, list(np.cumsum(per_round)), us
+
+
+def _emit_bytes_to_target(prefix, runs, order=None):
+    """Shared Pareto read-out: MB to reach the common target loss (worst
+    final + margin), with the saving vs the dense baseline."""
+    target = max(l[-1] for l, _ in runs.values()) + 0.02
+    base_mb = None
+    for name in (order or list(runs)):
+        losses, bytes_cum = runs[name]
+        idx = next((i for i, l in enumerate(losses) if l <= target), None)
+        mb = bytes_cum[idx] / 1e6 if idx is not None else float("inf")
+        if name == "dense_f32":
+            base_mb = mb
+        emit(f"{prefix}/target/{name}", 0.0, target=round(target, 3),
+             mb_to_target=round(mb, 3),
+             saving_vs_dense=(round(base_mb / mb, 2)
+                              if mb and base_mb not in (None, 0) else 0))
 
 
 def bench_convergence(rounds):
@@ -222,20 +256,73 @@ def bench_bytes_to_loss(rounds):
         emit(f"bytes_to_loss/{name}", us,
              loss_final=round(losses[-1], 4),
              mb_total=round(bytes_cum[-1] / 1e6, 2))
-    # bytes to reach the common target loss
-    target = max(l[-1] for l, _ in runs.values()) + 0.02
-    base_mb = None
-    order = list(runs)
-    for name in order:
-        losses, bytes_cum = runs[name]
-        idx = next((i for i, l in enumerate(losses) if l <= target), None)
-        mb = bytes_cum[idx] / 1e6 if idx is not None else float("inf")
-        if name == "dense_f32":
-            base_mb = mb
-        emit(f"bytes_to_loss/target/{name}", 0.0, target=round(target, 3),
-             mb_to_target=round(mb, 3),
-             saving_vs_dense=(round(base_mb / mb, 2)
-                              if mb and base_mb not in (None, 0) else 0))
+    _emit_bytes_to_target("bytes_to_loss", runs)
+
+
+def bench_combined(rounds):
+    """Combined-scheme sweep over the CommPipeline spec grammar: a topk
+    fraction x qsgd bits grid plus sketch>>qsgd, reporting bytes to reach a
+    common target loss — the per-arch Pareto points read off these rows."""
+    base = dict(algorithm="fedavg", local_steps=2, local_lr=0.2)
+    configs = [("dense_f32", FLConfig(**base))]
+    for frac in (0.01, 0.05, 0.25):
+        for bits in (4, 8):
+            spec = f"topk:{frac:g}>>qsgd:{bits}"
+            configs.append((spec.replace(":", "").replace(">>", "+"),
+                            FLConfig(uplink_compressor=spec, **base)))
+    configs.append(("sketch+qsgd8",
+                    FLConfig(uplink_compressor="sketch>>qsgd:8",
+                             **{**base, "local_lr": 0.1})))
+    runs = {}
+    for name, fl in configs:
+        losses, bytes_cum, us = _fl_run(fl, rounds)
+        runs[name] = (losses, bytes_cum)
+        emit(f"combined/{name}", us, loss_final=round(losses[-1], 4),
+             mb_total=round(bytes_cum[-1] / 1e6, 2))
+    _emit_bytes_to_target("combined", runs)
+
+
+def bench_engine(rounds):
+    """RoundEngine acceptance row: run_rounds (scan, chunk=8) vs the Python
+    round loop over the jit'd step — identical final params for fixed seed,
+    wall-clock per round for both drivers (compile excluded)."""
+    fl = FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                  uplink_compressor="qsgd8")
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    clients, rounds = 8, max(8, rounds)
+    dcfg = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=clients,
+                         seq_len=48, batch_per_client=4, heterogeneity=2.0)
+    sim = make_sim_step(model, fl, clients, chunk=48)
+
+    def data_fn(r):
+        return sample_round(dcfg, jax.random.fold_in(jax.random.PRNGKey(1), r))
+
+    # --- Python round loop over the jit'd step ----------------------------
+    state = sim.init_fn(jax.random.PRNGKey(0))
+    state, _ = sim.step_fn(state, data_fn(jnp.int32(0)))     # compile
+    state = sim.init_fn(jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        state, m = sim.step_fn(state, data_fn(jnp.int32(r)))
+    jax.block_until_ready(state.params)
+    loop_us = (time.perf_counter() - t0) / rounds * 1e6
+    loop_params = state.params
+
+    # --- scan driver ------------------------------------------------------
+    from repro.core.engine import RoundRunner
+    runner = RoundRunner(sim.engine, data_fn, chunk=8)
+    s2, _ = runner.run(sim.init_fn(jax.random.PRNGKey(0)), rounds)  # compile
+    t0 = time.perf_counter()
+    s2, ms = runner.run(sim.init_fn(jax.random.PRNGKey(0)), rounds)
+    jax.block_until_ready(s2.params)
+    scan_us = (time.perf_counter() - t0) / rounds * 1e6
+
+    diff = max(float(jnp.abs(a - b).max()) for a, b in
+               zip(jax.tree.leaves(loop_params), jax.tree.leaves(s2.params)))
+    emit("engine/scan_vs_loop", scan_us, loop_us=round(loop_us, 1),
+         speedup=round(loop_us / scan_us, 3), rounds=rounds,
+         max_param_diff=diff, identical=bool(diff == 0.0))
 
 
 def bench_selection(rounds):
@@ -376,8 +463,10 @@ BENCHES = {
     "kernels": bench_kernels,
     "convergence": bench_convergence,
     "bytes_to_loss": bench_bytes_to_loss,
+    "combined": bench_combined,
     "selection": bench_selection,
     "hierarchy": bench_hierarchy,
+    "engine": bench_engine,
     "extensions": bench_extensions,
     "roofline": bench_roofline,
 }

@@ -1,15 +1,20 @@
 """Reproduce the survey's central figure: accuracy vs cumulative bytes for
 every compression family, on the same non-iid federated LM task.
 
-    PYTHONPATH=src python examples/compare_compressors.py --rounds 30
+    PYTHONPATH=src python examples/compare_compressors.py --rounds 30 [--grid]
 
-Prints an aligned table plus an ASCII loss-vs-MB plot.
+Prints an aligned table plus an ASCII loss-vs-MB plot. ``--grid`` adds the
+combined-scheme sweep (topk fraction x qsgd bits, plus sketch>>qsgd) so the
+Pareto points per budget can be read off. Each run is one RoundEngine scan
+(``run_rounds``) with the held-out eval compiled into the scan body.
 """
 import argparse
 
 import jax
+import numpy as np
 
 from repro.configs.registry import get_arch
+from repro.core.engine import run_rounds
 from repro.core.simulate import make_sim_step
 from repro.core.types import FLConfig
 from repro.data.synthetic import FedDataConfig, eval_batch, sample_round
@@ -36,12 +41,30 @@ METHODS = {
     "dgc_1%": FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
                        uplink_compressor="topk", topk_fraction=0.01,
                        dgc_momentum=0.9),
+    # DGC warm-up: effective fraction anneals 0.01^((r+1)/5): ~40% -> 1%
+    "dgc_1%_warmup": FLConfig(algorithm="fedavg", local_steps=2,
+                              local_lr=0.2, uplink_compressor="topk",
+                              topk_fraction=0.01, dgc_momentum=0.9,
+                              dgc_warmup_rounds=4),
 }
+
+# the combined-scheme sweep (--grid): quantised-sparse grid + sketch>>qsgd
+GRID = {
+    f"topk{f:g}>>qsgd{b}": FLConfig(
+        algorithm="fedavg", local_steps=2, local_lr=0.2,
+        uplink_compressor=f"topk:{f:g}>>qsgd:{b}")
+    for f in (0.01, 0.05, 0.25) for b in (4, 8)
+}
+GRID["sketch>>qsgd8"] = FLConfig(algorithm="fedavg", local_steps=2,
+                                 local_lr=0.1,
+                                 uplink_compressor="sketch>>qsgd:8")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--grid", action="store_true",
+                    help="add the combined-scheme topk x qsgd sweep")
     args = ap.parse_args()
 
     cfg = get_arch("paper_lm")
@@ -49,32 +72,48 @@ def main():
     data = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=8,
                          seq_len=48, batch_per_client=4, heterogeneity=2.0)
     ev = eval_batch(data, jax.random.PRNGKey(99), batch_size=8)
-    evl = jax.jit(lambda p: model.loss(p, ev, chunk=48)[0])
+    data_fn = lambda r: sample_round(
+        data, jax.random.fold_in(jax.random.PRNGKey(1), r))
+    metrics_fn = lambda st, m: dict(
+        m, eval_loss=model.loss(st.params, ev, chunk=48)[0])
 
+    methods = dict(METHODS)
+    if args.grid:
+        methods.update(GRID)
     results = {}
-    for name, fl in METHODS.items():
+    for name, fl in methods.items():
         sim = make_sim_step(model, fl, 8, chunk=48)
         state = sim.init_fn(jax.random.PRNGKey(0))
-        cum, curve = 0.0, []
-        for r in range(args.rounds):
-            b = sample_round(data, jax.random.fold_in(jax.random.PRNGKey(1), r))
-            state, m = sim.step_fn(state, b)
-            cum += float(m["ledger"].uplink_wire + m["ledger"].downlink_wire)
-            curve.append((cum / 1e6, float(evl(state.params))))
+        state, ms = run_rounds(sim.engine, state, data_fn, args.rounds,
+                               chunk=8, metrics_fn=metrics_fn)
+        mb = np.cumsum(np.asarray(ms["ledger"].uplink_wire, np.float64)
+                       + np.asarray(ms["ledger"].downlink_wire,
+                                    np.float64)) / 1e6
+        curve = list(zip(mb, [float(x) for x in ms["eval_loss"]]))
         results[name] = curve
-        print(f"{name:>12}: final eval {curve[-1][1]:.3f} "
+        print(f"{name:>14}: final eval {curve[-1][1]:.3f} "
               f"after {curve[-1][0]:8.2f} MB", flush=True)
 
     print("\nloss vs cumulative MB (log-ish buckets)")
-    header = f"{'MB<=':>8}" + "".join(f"{n:>12}" for n in results)
+    header = f"{'MB<=':>8}" + "".join(f"{n:>15}" for n in results)
     print(header)
     for budget in (1, 3, 10, 30, 100, 300, 1000):
         row = f"{budget:>8}"
         for name, curve in results.items():
             best = min((l for mb, l in curve if mb <= budget),
                        default=float("nan"))
-            row += f"{best:>12.3f}"
+            row += f"{best:>15.3f}"
         print(row)
+
+    # bytes to the common target loss — the Pareto read-out
+    target = max(c[-1][1] for c in results.values()) + 0.02
+    print(f"\nMB to reach loss<={target:.3f} (Pareto points)")
+    for name, curve in sorted(
+            results.items(),
+            key=lambda kv: next((mb for mb, l in kv[1] if l <= target),
+                                float("inf"))):
+        mb = next((mb for mb, l in curve if l <= target), None)
+        print(f"{name:>14}: {'%8.2f' % mb if mb is not None else '   never'}")
 
 
 if __name__ == "__main__":

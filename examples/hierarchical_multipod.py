@@ -15,6 +15,7 @@ import argparse                                              # noqa: E402
 import jax                                                   # noqa: E402
 import jax.numpy as jnp                                      # noqa: E402
 
+from repro.core.engine import run_rounds                     # noqa: E402
 from repro.core.hierarchical import make_hier_fl_train_step  # noqa: E402
 from repro.core.types import ArchConfig, FLConfig            # noqa: E402
 from repro.data.synthetic import FedDataConfig, sample_round # noqa: E402
@@ -39,22 +40,27 @@ def main():
                   hierarchical=True, sync_every=args.sync_every)
     h = make_hier_fl_train_step(model, fl, mesh, chunk=32)
     state = h.init_fn(jax.random.PRNGKey(0))
-    se, sc = jax.jit(h.step_edge), jax.jit(h.step_cloud)
 
     data = FedDataConfig(vocab_size=256, num_clients=4, seq_len=32,
                          batch_per_client=4, heterogeneity=2.0)
+
+    def data_fn(r):
+        b = sample_round(data, jax.random.fold_in(jax.random.PRNGKey(1), r))
+        return {k: v.reshape((2, 2) + v.shape[1:]) for k, v in b.items()
+                if k in ("tokens", "labels", "mask")}
+
     print(f"mesh={dict(mesh.shape)} params={model.param_count():,} "
           f"sync_every={args.sync_every}")
+    # one scan-compiled driver: the engine's round_fn folds the edge/cloud
+    # alternation into the compiled program (cond on round % sync_every)
+    state, ms = run_rounds(h.engine, state, data_fn, args.rounds, chunk=8)
     print(f"{'round':>5} {'kind':>6} {'loss':>7} {'pod_div':>10} {'wireMB':>8}")
     for r in range(args.rounds):
-        b = sample_round(data, jax.random.fold_in(jax.random.PRNGKey(1), r))
-        batch = {k: v.reshape((2, 2) + v.shape[1:]) for k, v in b.items()
-                 if k in ("tokens", "labels", "mask")}
         cloud = (r + 1) % args.sync_every == 0
-        state, m = (sc if cloud else se)(state, batch)
         print(f"{r:>5} {'cloud' if cloud else 'edge':>6} "
-              f"{float(m['loss']):>7.3f} {float(m['pod_divergence']):>10.2e} "
-              f"{float(m['ledger'].uplink_wire)/1e6:>8.3f}")
+              f"{float(ms['loss'][r]):>7.3f} "
+              f"{float(ms['pod_divergence'][r]):>10.2e} "
+              f"{float(ms['ledger'].uplink_wire[r])/1e6:>8.3f}")
     print("\npod divergence grows between syncs, resets at cloud rounds;")
     print("cloud rounds pay the extra (quantised) DCN hop — that factor of")
     print(f"{args.sync_every}x fewer cloud syncs is Hier-Local-QSGD's saving.")

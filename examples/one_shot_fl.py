@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get_arch
+from repro.core.engine import run_rounds
 from repro.core.simulate import make_sim_step
 from repro.core.types import FLConfig
 from repro.data.synthetic import FedDataConfig, eval_batch, sample_round
@@ -45,15 +46,17 @@ def main():
           f"eval={one_shot_loss:.3f}  uplink={one_shot_mb:.2f}MB")
 
     # --- FedAvg with the same number of gradient steps spread over rounds --
-    rounds = args.local_steps // 4
+    # (one scan-compiled run_rounds call — the multi-round driver)
+    rounds = max(1, args.local_steps // 4)
     fl2 = FLConfig(algorithm="fedavg", local_steps=4, local_lr=0.1)
     sim2 = make_sim_step(model, fl2, args.clients, chunk=48)
     s2 = sim2.init_fn(jax.random.PRNGKey(0))
-    mb2 = 0.0
-    for r in range(rounds):
-        b = sample_round(data, jax.random.fold_in(jax.random.PRNGKey(1), r))
-        s2, m2 = sim2.step_fn(s2, b)
-        mb2 += float(m2["ledger"].uplink_wire) / 1e6
+    s2, ms = run_rounds(
+        sim2.engine, s2,
+        lambda r: sample_round(data,
+                               jax.random.fold_in(jax.random.PRNGKey(1), r)),
+        rounds, chunk=min(8, rounds))
+    mb2 = float(ms["ledger"].uplink_wire.sum()) / 1e6
     multi_loss = float(evl(s2.params))
     print(f"fedavg   ({rounds} rounds x 4 local steps):    "
           f"eval={multi_loss:.3f}  uplink={mb2:.2f}MB")

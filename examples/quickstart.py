@@ -4,13 +4,16 @@
 
 Trains the paper-faithful small LM over 8 non-iid synthetic clients with the
 chosen uplink compressor and prints loss + communication-ledger columns —
-the survey's accuracy-vs-bytes trade-off, live.
+the survey's accuracy-vs-bytes trade-off, live. Rounds run through the
+RoundEngine scan driver (``run_rounds``): data sampling and the held-out
+eval are compiled into the scan, one dispatch per chunk of rounds.
 """
 import argparse
 
 import jax
 
 from repro.configs.registry import get_arch
+from repro.core.engine import run_rounds
 from repro.core.simulate import make_sim_step
 from repro.core.types import FLConfig
 from repro.data.synthetic import FedDataConfig, eval_batch, sample_round
@@ -37,19 +40,24 @@ def main():
     sim = make_sim_step(model, fl, args.clients, chunk=48)
     state = sim.init_fn(jax.random.PRNGKey(0))
     ev = eval_batch(data, jax.random.PRNGKey(99), batch_size=8)
-    evl = jax.jit(lambda p: model.loss(p, ev, chunk=48)[0])
+
+    data_fn = lambda r: sample_round(
+        data, jax.random.fold_in(jax.random.PRNGKey(1), r))
+    metrics_fn = lambda st, m: dict(
+        m, eval_loss=model.loss(st.params, ev, chunk=48)[0])
 
     print(f"params={model.param_count():,}  compressor={args.compressor}")
+    state, ms = run_rounds(sim.engine, state, data_fn, args.rounds,
+                           chunk=8, metrics_fn=metrics_fn)
+
     print(f"{'round':>5} {'train':>7} {'eval':>7} {'upMB':>8} {'ratio':>6}")
     cum = 0.0
     for r in range(args.rounds):
-        batch = sample_round(data, jax.random.fold_in(jax.random.PRNGKey(1), r))
-        state, m = sim.step_fn(state, batch)
-        led = m["ledger"]
+        led = jax.tree.map(lambda x, r=r: x[r], ms["ledger"])
         cum += float(led.uplink_wire + led.downlink_wire)
         if r % 2 == 1:
-            print(f"{r:>5} {float(m['loss']):>7.3f} "
-                  f"{float(evl(state.params)):>7.3f} {cum/1e6:>8.2f} "
+            print(f"{r:>5} {float(ms['loss'][r]):>7.3f} "
+                  f"{float(ms['eval_loss'][r]):>7.3f} {cum/1e6:>8.2f} "
                   f"{float(led.compression_ratio()):>6.1f}x")
 
 

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import checkpoint
+from repro.core.engine import RoundRunner
 from repro.core.simulate import make_sim_step
 from repro.core.types import ArchConfig, FLConfig
 from repro.data.synthetic import FedDataConfig, eval_batch, sample_round
@@ -69,19 +70,26 @@ def main():
     print(f"model={cfg.name} params={model.param_count():,} "
           f"clients={args.clients} E={fl.local_steps} "
           f"compressor={args.compressor}")
-    cum, t0 = 0.0, time.time()
-    for r in range(args.rounds):
-        batch = sample_round(data, jax.random.fold_in(jax.random.PRNGKey(1), r))
-        state, m = sim.step_fn(state, batch)
-        cum += float(m["ledger"].uplink_wire + m["ledger"].downlink_wire)
-        if (r + 1) % args.eval_every == 0 or r == args.rounds - 1:
-            el = float(evl(state.params))
-            dt = time.time() - t0
-            print(f"round {r+1:>4}  train={float(m['loss']):.3f} "
-                  f"eval={el:.3f}  comm={cum/1e6:,.1f}MB  "
-                  f"({dt/(r+1):.2f}s/round)", flush=True)
-            if args.checkpoint:
-                checkpoint.save(args.checkpoint, state.params)
+    # rounds run through the RoundEngine scan driver — one runner for the
+    # whole run, so the compiled chunk scan is reused across eval windows;
+    # eval + checkpoint happen at window boundaries
+    data_fn = lambda r: sample_round(
+        data, jax.random.fold_in(jax.random.PRNGKey(1), r))
+    runner = RoundRunner(sim.engine, data_fn, chunk=8)
+    cum, t0, done = 0.0, time.time(), 0
+    while done < args.rounds:
+        k = min(args.eval_every, args.rounds - done)
+        state, ms = runner.run(state, k)
+        cum += float(ms["ledger"].uplink_wire.sum()
+                     + ms["ledger"].downlink_wire.sum())
+        done += k
+        el = float(evl(state.params))
+        dt = time.time() - t0
+        print(f"round {done:>4}  train={float(ms['loss'][-1]):.3f} "
+              f"eval={el:.3f}  comm={cum/1e6:,.1f}MB  "
+              f"({dt/done:.2f}s/round)", flush=True)
+        if args.checkpoint:
+            checkpoint.save(args.checkpoint, state.params)
     if args.checkpoint:
         print(f"saved {args.checkpoint}")
 

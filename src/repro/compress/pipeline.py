@@ -168,33 +168,71 @@ class ErrorFeedback(_Wrapper):
 class MomentumCorrection(_Wrapper):
     """DGC (Lin et al. 2018) momentum correction + gradient accumulation:
     u ← m·u + x; v ← v + u; transmit encode(v); the unsent part of v stays
-    local and the momentum of *sent* coordinates is cleared (masking)."""
+    local and the momentum of *sent* coordinates is cleared (masking).
 
-    def __init__(self, inner: CommTransform, momentum: float = 0.9):
+    Warm-up sparsity schedule (DGC §3.3): with ``warmup_rounds = W`` and
+    ``final_fraction = f``, round r transmits the top ``f^((r+1)/(W+1))``
+    fraction — exponentially annealing from nearly-dense to the target.
+    Shapes stay static under jit: the *inner* pipeline is sized for the
+    first (widest) round's fraction and later rounds mask ``v`` down to the
+    annealed effective support before encoding, so the extra slots carry
+    zeros. The wire payload (and ``wire_bits``) is therefore constant at
+    the warm-up capacity; the *effective* sparsity anneals."""
+
+    def __init__(self, inner: CommTransform, momentum: float = 0.9,
+                 warmup_rounds: int = 0, final_fraction: float = 0.0):
         super().__init__(inner)
         self.momentum = momentum
+        self.warmup_rounds = int(warmup_rounds)
+        self.final_fraction = final_fraction
         self.name = f"mc{momentum:g}({inner.name})"
+        if self.warmup_rounds:
+            assert 0.0 < final_fraction <= 1.0, \
+                "warm-up schedule needs the target (final) fraction"
+            self.name += f"@warmup{self.warmup_rounds}"
 
     def init(self, shape):
-        return {"u": jnp.zeros(shape, jnp.float32),
-                "v": jnp.zeros(shape, jnp.float32),
-                "inner": self.inner.init(shape)}
+        st = {"u": jnp.zeros(shape, jnp.float32),
+              "v": jnp.zeros(shape, jnp.float32),
+              "inner": self.inner.init(shape)}
+        if self.warmup_rounds:
+            st["round"] = jnp.zeros((), jnp.int32)
+        return st
+
+    def _anneal_mask(self, v, rounds):
+        """Zero all but the top-k_eff coordinates of v, where the effective
+        fraction f_r = final^((r+1)/(W+1)) anneals down to final."""
+        n = v.shape[0]
+        expo = jnp.minimum(rounds + 1, self.warmup_rounds + 1) / \
+            (self.warmup_rounds + 1.0)
+        frac = jnp.exp(expo * jnp.log(self.final_fraction))
+        k_eff = jnp.clip(jnp.round(n * frac).astype(jnp.int32), 1, n)
+        mag = jnp.sort(jnp.abs(v))[::-1]
+        thr = mag[k_eff - 1]
+        return jnp.where(jnp.abs(v) >= thr, v, 0.0)
 
     def encode(self, state, rng, x):
         u = self.momentum * state["u"].reshape(x.shape) + x
         v = state["v"].reshape(x.shape) + u
-        payload, ist = self.inner.encode(state["inner"], rng, v)
+        v_enc = v
+        if self.warmup_rounds:
+            v_enc = self._anneal_mask(v, state["round"])
+        payload, ist = self.inner.encode(state["inner"], rng, v_enc)
         v_hat = self.inner.decode(payload, v.shape[0])
         sent = v_hat != 0.0
         new_v = (v - v_hat).reshape(state["v"].shape)
         new_u = jnp.where(sent, 0.0, u).reshape(state["u"].shape)
-        return payload, {"u": new_u, "v": new_v, "inner": ist}
+        new_state = {"u": new_u, "v": new_v, "inner": ist}
+        if self.warmup_rounds:
+            new_state["round"] = state["round"] + 1
+        return payload, new_state
 
 
 def error_feedback(inner: CommTransform, decay: float = 1.0) -> CommTransform:
     return ErrorFeedback(inner, decay)
 
 
-def momentum_correction(inner: CommTransform,
-                        momentum: float = 0.9) -> CommTransform:
-    return MomentumCorrection(inner, momentum)
+def momentum_correction(inner: CommTransform, momentum: float = 0.9,
+                        warmup_rounds: int = 0,
+                        final_fraction: float = 0.0) -> CommTransform:
+    return MomentumCorrection(inner, momentum, warmup_rounds, final_fraction)

@@ -57,29 +57,36 @@ def comm_state_template(pipe: CommTransform, params: PyTree):
                  for p in jax.tree.leaves(params))
 
 
-def comm_state_init(pipe: CommTransform, params: PyTree, C: int):
-    """Concrete zero state with a leading global-client dim C on every array
-    (the init contract: pipeline state starts at zero)."""
+def comm_state_init(pipe: CommTransform, params: PyTree, lead):
+    """Concrete zero state with leading client dim(s) ``lead`` on every array
+    (the init contract: pipeline state starts at zero). ``lead`` is the
+    global client count C, or a tuple of leading dims — e.g. ``(G, Ce)`` for
+    the hierarchical (pod, data) client grid."""
+    lead = (lead,) if isinstance(lead, int) else tuple(lead)
     return tuple(
-        jax.tree.map(lambda a: jnp.zeros((C,) + a.shape, a.dtype), tmpl)
+        jax.tree.map(lambda a: jnp.zeros(lead + a.shape, a.dtype), tmpl)
         for tmpl in comm_state_template(pipe, params))
 
 
 def comm_state_specs(pipe: CommTransform, params: PyTree, param_specs: PyTree,
-                     axes: tuple):
-    """PartitionSpecs for the comm state: client dim over the client axes;
+                     axes: tuple, separate: bool = False):
+    """PartitionSpecs for the comm state: client dim(s) over the client axes;
     leaf-shaped state arrays (residuals, momenta) additionally inherit the
-    parameter's own sharding, anything else is replicated."""
+    parameter's own sharding, anything else is replicated.
+
+    ``separate=False`` (star/gossip): ONE fused leading dim sharded over all
+    ``axes``. ``separate=True`` (hier): one leading dim per axis — e.g.
+    ``("pod", "data")`` -> a (G, Ce) client grid."""
     p_leaves = jax.tree.leaves(params)
     s_leaves = jax.tree.leaves(param_specs, is_leaf=lambda s: isinstance(s, P))
-    lead = axes if axes else None
+    lead = tuple(axes) if separate else ((axes if axes else None),)
     out = []
     for pl, sl in zip(p_leaves, s_leaves):
         tmpl = jax.eval_shape(functools.partial(pipe.init, tuple(pl.shape)))
         out.append(jax.tree.map(
-            lambda a, pl=pl, sl=sl: (P(lead, *sl)
-                                     if tuple(a.shape) == tuple(pl.shape)
-                                     else P(lead, *([None] * a.ndim))), tmpl))
+            lambda a, pl=pl, sl=sl: (
+                P(*lead, *sl) if tuple(a.shape) == tuple(pl.shape)
+                else P(*lead, *([None] * a.ndim))), tmpl))
     return tuple(out)
 
 

@@ -1,4 +1,6 @@
-"""``make_fl_train_step`` — one jit-compiled FL round, composing:
+"""``make_fl_train_step`` — one jit-compiled FL round on the **star**
+topology (clients on mesh axes), as a thin binding over the RoundEngine
+(``repro.core.engine``):
 
   local updating (FedAvg E epochs / FedSGD / FedProx / SCAFFOLD)
   -> client selection (all / random / power-of-choice / multi-criteria)
@@ -7,6 +9,10 @@
      wrapping transforms owned by the pipeline, not this trainer)
   -> server optimizer (FedAvg / FedAvgM / FedAdam / FedYogi)
   -> communication ledger
+
+The hop sequence, selection/server-opt/ledger plumbing and the client
+update all live in the engine — this module only binds
+``Topology.star(client_axis)`` and re-exposes the legacy surface.
 
 Batch layout (client-major; ``C`` = number of FL clients on the mesh):
   tokens/labels/mask : (C, B_local, S)
@@ -17,118 +23,18 @@ Batch layout (client-major; ``C`` = number of FL clients on the mesh):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compress.api import Identity, make_compressor
-from repro.compress.pipeline import error_feedback, momentum_correction
-from repro.core import aggregation, selection as sel, server_opt
-from repro.core.types import ArchConfig, CommLedger, FLConfig, FLState
-from repro.models import sharding as shd
+from repro.core.engine import (Topology, _client_update,  # noqa: F401
+                               ledger_terms, make_round_engine,
+                               uplink_pipeline)
+from repro.core.types import FLConfig
 from repro.models.model import Model
 
 PyTree = Any
 
-
-# ---------------------------------------------------------------------------
-# Static ledger terms (bits per selected client per round)
-# ---------------------------------------------------------------------------
-
-def uplink_pipeline(fl: FLConfig):
-    """The uplink CommPipeline from config: the spec string (legacy name or
-    ``"a:x>>b:y"`` chain) plus the stateful correction wrapper — DGC momentum
-    correction if ``dgc_momentum`` is set, else error feedback for biased
-    pipelines. Wrappers leave wire/entropy bits unchanged."""
-    up = make_compressor(fl.uplink_compressor, fraction=fl.topk_fraction,
-                         block=fl.qsgd_block, rows=fl.sketch_rows,
-                         cols=fl.sketch_cols)
-    if fl.dgc_momentum > 0.0 and not up.is_identity:
-        up = momentum_correction(up, fl.dgc_momentum)
-    elif up.biased and fl.error_feedback:
-        up = error_feedback(up)
-    return up
-
-
-def ledger_terms(model: Model, fl: FLConfig):
-    up = uplink_pipeline(fl)
-    down = make_compressor(fl.downlink_compressor, block=fl.qsgd_block)
-    sizes = [int(np.prod(d.shape)) for d in
-             jax.tree.leaves(model.defs, is_leaf=lambda x: hasattr(x, "logical"))]
-    # SCAFFOLD ships control variates, FedDANE ships a gradient round: 2x
-    scaff = 2.0 if fl.algorithm in ("scaffold", "feddane") else 1.0
-    t = {
-        "up_wire": scaff * sum(up.wire_bits(n) for n in sizes) / 8.0,
-        "up_entropy": scaff * sum(up.entropy_bits(n) for n in sizes) / 8.0,
-        "down_wire": sum(down.wire_bits(n) for n in sizes) / 8.0,
-        "dense": sum(32.0 * n for n in sizes) / 8.0,
-    }
-    return t, up, down
-
-
-# ---------------------------------------------------------------------------
-# Client local update
-# ---------------------------------------------------------------------------
-
-def _client_update(model: Model, fl: FLConfig, params, batch_c, rng,
-                   control, c_i, chunk, global_grad=None):
-    """One client's local training. Returns (delta, mean_loss, first_loss,
-    new_c_i). For ``feddane`` [49], ``global_grad`` is the aggregated
-    gradient at the global params; the local steps use the DANE-corrected
-    gradient g_i(w') + (g(w) − g_i(w)) + mu·(w' − w)."""
-    E, lr = fl.local_steps, fl.local_lr
-    loss_fn = lambda p: model.loss(p, batch_c, chunk=chunk)[0]
-
-    ddt = jnp.bfloat16 if fl.delta_dtype == "bf16" else jnp.float32
-    fast = (E == 1 and fl.algorithm in ("fedavg", "fedsgd")
-            and fl.fedprox_mu == 0.0)
-    if fast:
-        loss, g = jax.value_and_grad(loss_fn)(params)
-        delta = jax.tree.map(lambda g_: (-lr * g_).astype(ddt), g)
-        return delta, loss, loss, c_i
-
-    dane_corr = None
-    if fl.algorithm == "feddane" and global_grad is not None:
-        g_i0 = jax.grad(loss_fn)(params)
-        dane_corr = jax.tree.map(
-            lambda gg, gi: gg.astype(jnp.float32) - gi.astype(jnp.float32),
-            global_grad, g_i0)
-
-    def step(p_c, _):
-        loss, g = jax.value_and_grad(loss_fn)(p_c)
-        if fl.algorithm in ("fedprox", "feddane") and fl.fedprox_mu:
-            g = jax.tree.map(
-                lambda g_, pc, p0: g_ + fl.fedprox_mu * (pc - p0).astype(g_.dtype),
-                g, p_c, params)
-        if dane_corr is not None:
-            g = jax.tree.map(lambda g_, d: g_ + d.astype(g_.dtype),
-                             g, dane_corr)
-        if fl.algorithm == "scaffold":
-            g = jax.tree.map(
-                lambda g_, c, ci: g_ + (c - ci).astype(g_.dtype), g, control, c_i)
-        p_c = jax.tree.map(lambda a, g_: (a.astype(jnp.float32)
-                                          - lr * g_.astype(jnp.float32)
-                                          ).astype(a.dtype), p_c, g)
-        return p_c, loss
-
-    p_fin, losses = jax.lax.scan(step, params, None, length=E)
-    delta = jax.tree.map(
-        lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32))
-        .astype(ddt), p_fin, params)
-    new_c_i = c_i
-    if fl.algorithm == "scaffold":
-        new_c_i = jax.tree.map(
-            lambda ci, c, d: ci - c - d / (E * lr), c_i, control, delta)
-    return delta, losses.mean(), losses[0], new_c_i
-
-
-# ---------------------------------------------------------------------------
-# Step builder
-# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class FLTrainStep:
@@ -138,170 +44,19 @@ class FLTrainStep:
     batch_sharding_fn: Any  # batch pytree -> shardings
     n_clients: int
     terms: dict
+    engine: Any = None      # the underlying RoundEngine (for run_rounds)
 
 
 def make_fl_train_step(model: Model, fl: FLConfig, mesh: Mesh,
                        chunk: int = 512) -> FLTrainStep:
-    cfg = model.cfg
-    axes = aggregation.client_axes(mesh, cfg.client_axis)
-    C = int(np.prod([dict(mesh.shape)[a] for a in axes])) if axes else 1
-    client_p = P(axes) if axes else P()
-
-    abs_params = model.abstract_params()
-    pspecs = shd.tree_specs(abs_params, model.logical_axes(),
-                            mesh, cfg.fsdp)
-    terms, up_comp, down_comp = ledger_terms(model, fl)
-    aggregate = aggregation.make_aggregator(mesh, pspecs, up_comp,
-                                            cfg.client_axis,
-                                            abstract_params=abs_params)
-    agg_ctrl = (aggregation.make_aggregator(mesh, pspecs, Identity(),
-                                            cfg.client_axis)
-                if fl.algorithm == "scaffold" else None)
-    scaffold = fl.algorithm == "scaffold"
-    stateful = up_comp.stateful
-
-    # --- shardings ----------------------------------------------------------
-    def _shard(spec_tree):
-        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
-                            is_leaf=lambda x: isinstance(x, P))
-
-    clientful = shd.with_prefix(pspecs, axes if axes else None)
-    state_specs = FLState(
-        params=pspecs,
-        server_opt_state={k: pspecs
-                          for k in server_opt.state_keys(fl.server_opt)},
-        control=pspecs if scaffold else None,
-        client_controls=clientful if scaffold else None,
-        comm_state=(aggregation.comm_state_specs(up_comp, abs_params, pspecs,
-                                                 axes)
-                    if stateful else None),
-        rng=P(), round=P(),
-    )
-
-    # --- init ----------------------------------------------------------------
-    def init_fn(rng):
-        params = model.init(rng)
-        zerosf32 = lambda: jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        zeros_clientful = lambda: jax.tree.map(
-            lambda p: jnp.zeros((C,) + p.shape, jnp.float32), params)
-        return FLState(
-            params=params,
-            server_opt_state=server_opt.init_state(fl.server_opt, params),
-            control=zerosf32() if scaffold else None,
-            client_controls=zeros_clientful() if scaffold else None,
-            comm_state=(aggregation.comm_state_init(up_comp, params, C)
-                        if stateful else None),
-            rng=jax.random.PRNGKey(fl.seed),
-            round=jnp.zeros((), jnp.int32),
-        )
-
-    # --- the round ------------------------------------------------------------
-    def step_fn(state: FLState, batch):
-        rng, r_down, r_sel, r_up, r_next = jax.random.split(state.rng, 5)
-
-        # downlink (LFL): clients train from a quantised global model
-        params = state.params
-        if not down_comp.is_identity:
-            flatp = jax.tree.map(lambda p: p.reshape(-1).astype(jnp.float32),
-                                 params)
-            params = jax.tree.map(
-                lambda p, f: down_comp.roundtrip(r_down, f)
-                .reshape(p.shape).astype(p.dtype), params, flatp)
-
-        # local updates, vmapped over the client axis
-        ctrl = state.control if scaffold else None
-        rngs = jax.random.split(rng, C)
-
-        def upd(batch_c, r, ci):
-            return _client_update(model, fl, params, batch_c, r, ctrl, ci, chunk)
-
-        model_batch = {k: v for k, v in batch.items()
-                       if k not in ("sizes", "resources")}
-        if scaffold:
-            deltas, losses, first_losses, new_ci = jax.vmap(upd)(
-                model_batch, rngs, state.client_controls)
-        else:
-            deltas, losses, first_losses, _ = jax.vmap(
-                lambda b, r: upd(b, r, None))(model_batch, rngs)
-            new_ci = None
-
-        # selection -> per-client weights
-        sizes = batch.get("sizes", jnp.ones((C,), jnp.float32))
-        resources = batch.get("resources", jnp.ones((C, 4), jnp.float32))
-        weights = sel.select(fl, r_sel, losses=first_losses,
-                             resources=resources, sizes=sizes)
-        n_sel = (weights > 0).sum().astype(jnp.float32)
-
-        # compressed aggregation over the wire (pipeline state rides along)
-        agg_delta, new_comm = aggregate(deltas, weights, r_up,
-                                        state.comm_state)
-        if scaffold:
-            # unselected clients keep their control variate
-            selmask = (weights > 0).astype(jnp.float32)
-            new_ci = jax.tree.map(
-                lambda new, old: jnp.where(
-                    selmask.reshape((C,) + (1,) * (new.ndim - 1)) > 0, new, old),
-                new_ci, state.client_controls)
-            dci = jax.tree.map(lambda a, b: a - b, new_ci,
-                               state.client_controls)
-            agg_dc, _ = agg_ctrl(dci, weights, r_up, None)
-            control = jax.tree.map(
-                lambda c, d: c + (n_sel / C) * d, state.control, agg_dc)
-        else:
-            control = None
-
-        new_params, new_sos = server_opt.apply(fl, state.params, agg_delta,
-                                               state.server_opt_state)
-
-        ledger = CommLedger(
-            uplink_wire=n_sel * terms["up_wire"],
-            uplink_entropy=n_sel * terms["up_entropy"],
-            downlink_wire=n_sel * terms["down_wire"],
-            uplink_dense=n_sel * terms["dense"],
-            downlink_dense=n_sel * terms["dense"],
-        )
-        metrics = {
-            "loss": (weights * losses).sum() / jnp.maximum(weights.sum(), 1e-9),
-            "loss_all": losses.mean(),
-            "selected": n_sel,
-            "ledger": ledger,
-        }
-        new_state = FLState(
-            params=new_params, server_opt_state=new_sos, control=control,
-            client_controls=new_ci, comm_state=new_comm,
-            rng=r_next, round=state.round + 1,
-        )
-        return new_state, metrics
-
-    state_shardings = jax.tree.map(
-        lambda s: NamedSharding(mesh, s), state_specs,
-        is_leaf=lambda x: isinstance(x, P))
-
-    def batch_sharding_fn(batch):
-        """Client dim -> client axes; for pod-clients the within-client batch
-        dim additionally shards over the data axis."""
-        out = {}
-        sub = ("data",) if (cfg.client_axis == "pod"
-                            and "data" in mesh.axis_names) else ()
-        lead = tuple(client_p) or (None,)
-        for k, v in batch.items():
-            nd = np.ndim(v) if not hasattr(v, "ndim") else v.ndim
-            if nd == 0:
-                out[k] = NamedSharding(mesh, P())
-            elif nd <= 2 or not sub:
-                # (C,) / (C, small) metadata: client axes only
-                out[k] = NamedSharding(mesh, P(*lead))
-            else:
-                # (C, B, ...) model inputs: within-client batch over data
-                out[k] = NamedSharding(mesh, P(*lead, *sub))
-        return out
-
+    engine = make_round_engine(model, fl, Topology.star(model.cfg.client_axis),
+                               mesh=mesh, chunk=chunk)
     return FLTrainStep(
-        init_fn=init_fn,
-        step_fn=step_fn,
-        state_shardings=state_shardings,
-        batch_sharding_fn=batch_sharding_fn,
-        n_clients=C,
-        terms=terms,
+        init_fn=engine.init_fn,
+        step_fn=engine.round_fn,
+        state_shardings=engine.state_shardings,
+        batch_sharding_fn=engine.batch_sharding_fn,
+        n_clients=engine.n_clients,
+        terms=engine.terms,
+        engine=engine,
     )

@@ -1,4 +1,5 @@
-"""Decentralized / peer-to-peer FL (survey §III.B.4).
+"""Decentralized / peer-to-peer FL (survey §III.B.4) — the
+``Topology.gossip`` binding of the RoundEngine.
 
 No central server: every client keeps its own model (leading C dim over the
 ``data`` axis) and each round does local SGD followed by **gossip mixing**
@@ -10,26 +11,26 @@ exactly the survey's topology contrast, Fig. 7).
   * QuanTimed-DSGD [61]: neighbours exchange *quantized* models
     (``compressor="qsgd8"``) — the wire carries int8.
 
+The mix hop runs the full uplink CommPipeline *statefully*: biased
+pipelines (top-k, STC, chained specs) gossip with error feedback — the
+residual rides in ``FLState.comm_state`` with a leading C dim over ``data``
+and never crosses the wire (DESIGN.md §5).
+
 Mixing matrix: symmetric ring  W = I/2 + (L+R)/4  (doubly stochastic), so the
 iterates converge to consensus at the classic 1-λ₂(W) rate; the test suite
-asserts the consensus contraction.
+asserts the consensus contraction. Custom graphs: ``Topology.gossip``
+accepts ``(ring_offset, weight)`` edge tuples.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compress.api import make_compressor
+from repro.core.engine import Topology, make_round_engine
 from repro.core.types import FLConfig
-from repro.models import sharding as shd
 from repro.models.model import Model
-
-from repro.core.compat import shard_map
 
 
 @dataclasses.dataclass
@@ -38,77 +39,19 @@ class GossipStep:
     step_fn: Any
     state_shardings: Any
     n_clients: int
+    terms: dict = None
+    engine: Any = None      # the underlying RoundEngine (for run_rounds)
 
 
 def make_gossip_step(model: Model, fl: FLConfig, mesh: Mesh,
                      chunk: int = 512) -> GossipStep:
-    cfg = model.cfg
-    C = dict(mesh.shape)["data"]
-    comp = make_compressor(fl.uplink_compressor, fraction=fl.topk_fraction,
-                           block=fl.qsgd_block)
-
-    pspecs = shd.tree_specs(model.abstract_params(), model.logical_axes(),
-                            mesh, cfg.fsdp)
-    cspecs = shd.with_prefix(pspecs, "data")
-
-    fwd = [(i, (i + 1) % C) for i in range(C)]
-    bwd = [(i, (i - 1) % C) for i in range(C)]
-
-    def mix(params, rng):
-        def body(ptree):
-            out = []
-            for li, leaf in enumerate(jax.tree.leaves(ptree)):
-                flat = leaf.reshape(-1).astype(jnp.float32)
-                r = jax.random.fold_in(rng, li)
-                payload, _ = comp.encode(comp.init(flat.shape), r, flat)
-                left = jax.lax.ppermute(payload, "data", fwd)
-                right = jax.lax.ppermute(payload, "data", bwd)
-                n = flat.shape[0]
-                mixed = 0.5 * flat + 0.25 * (comp.decode(left, n)
-                                             + comp.decode(right, n))
-                out.append(mixed.reshape(leaf.shape).astype(leaf.dtype))
-            return jax.tree.unflatten(jax.tree.structure(ptree), out)
-        return shard_map(body, mesh=mesh, in_specs=(cspecs,),
-                         out_specs=cspecs, check_vma=False)(params)
-
-    def step_fn(state, batch):
-        params, rng, rnd = state
-        r_mix, r_next = jax.random.split(rng)
-
-        def local(p_c, batch_c):
-            loss, g = jax.value_and_grad(
-                lambda p: model.loss(p, batch_c, chunk=chunk)[0])(p_c)
-            p_c = jax.tree.map(
-                lambda a, g_: (a.astype(jnp.float32)
-                               - fl.local_lr * g_.astype(jnp.float32)
-                               ).astype(a.dtype), p_c, g)
-            return p_c, loss
-
-        params, losses = jax.vmap(local)(params, batch)
-        params = mix(params, r_mix)
-
-        # consensus error (mean squared distance to the mean model)
-        leaves = jax.tree.leaves(params)
-        consensus = sum(
-            jnp.sum((l.astype(jnp.float32)
-                     - l.astype(jnp.float32).mean(0, keepdims=True)) ** 2)
-            for l in leaves) / sum(l.size for l in leaves)
-        return (params, r_next, rnd + 1), {"loss": losses.mean(),
-                                           "consensus": consensus}
-
-    def init_fn(rng):
-        p = model.init(rng)
-        # heterogeneous start: per-client perturbation (tests consensus)
-        ps = jax.tree.map(
-            lambda a: jnp.broadcast_to(a, (C,) + a.shape), p)
-        return (ps, jax.random.PRNGKey(fl.seed), jnp.zeros((), jnp.int32))
-
-    state_specs = (cspecs, P(), P())
+    engine = make_round_engine(model, fl, Topology.gossip(), mesh=mesh,
+                               chunk=chunk)
     return GossipStep(
-        init_fn=init_fn,
-        step_fn=step_fn,
-        state_shardings=jax.tree.map(lambda s: NamedSharding(mesh, s),
-                                     state_specs,
-                                     is_leaf=lambda x: isinstance(x, P)),
-        n_clients=C,
+        init_fn=engine.init_fn,
+        step_fn=engine.round_fn,
+        state_shardings=engine.state_shardings,
+        n_clients=engine.n_clients,
+        terms=engine.terms,
+        engine=engine,
     )

@@ -1,4 +1,5 @@
-"""Hierarchical FL: client -> edge (pod) -> cloud (cross-pod).
+"""Hierarchical FL: client -> edge (pod) -> cloud (cross-pod) — the
+``Topology.hier`` binding of the RoundEngine.
 
 Maps Hier-Local-QSGD [73] and FedPAQ's periodic averaging [45] onto the
 multi-pod mesh (DESIGN.md §1.3):
@@ -10,30 +11,32 @@ multi-pod mesh (DESIGN.md §1.3):
     compressor (``pod_compressor``) — Hier-Local-QSGD quantises exactly this
     hop.
 
+The edge hop runs the full uplink CommPipeline *statefully*: error-feedback
+residuals / DGC momentum ride in ``FLState.comm_state`` with (G, Ce)
+leading dims sharded over (pod, data) — biased pipelines keep their
+correction on the edge hop, same as the star path (DESIGN.md §5).
+
 Between cloud syncs the per-pod models *diverge* (that is the point — it is
 what buys the communication reduction), so parameters and server-optimizer
 state carry a leading G = n_pods dim sharded over ``pod``. Rather than a
-``lax.cond`` around a collective, we compile **two** step programs (edge-only
-and edge+cloud) and let the driver alternate — the deployment-realistic
-schedule, and it keeps each HLO's collective set honest for the roofline.
+``lax.cond`` around a collective, the factory exposes **two** step programs
+(edge-only and edge+cloud) and lets per-round drivers alternate — the
+deployment-realistic schedule, and it keeps each HLO's collective set honest
+for the roofline. (The engine's scan driver ``run_rounds`` instead uses the
+engine's cond-based ``round_fn``, which folds the alternation into one
+compiled program.)
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compress.api import make_compressor
-from repro.core import server_opt
-from repro.core.types import CommLedger, FLConfig
-from repro.models import sharding as shd
+from repro.core.engine import Topology, make_round_engine
+from repro.core.types import FLConfig
 from repro.models.model import Model
 
-from repro.core.compat import shard_map
 PyTree = Any
 
 
@@ -46,167 +49,20 @@ class HierFLStep:
     n_pods: int
     clients_per_pod: int
     terms: dict
+    engine: Any = None      # the underlying RoundEngine (for run_rounds)
 
 
 def make_hier_fl_train_step(model: Model, fl: FLConfig, mesh: Mesh,
                             chunk: int = 512) -> HierFLStep:
-    assert "pod" in mesh.axis_names, "hierarchical FL needs a pod axis"
-    cfg = model.cfg
-    sizes = dict(mesh.shape)
-    G, Ce = sizes["pod"], sizes["data"]
-
-    pspecs = shd.tree_specs(model.abstract_params(), model.logical_axes(),
-                            mesh, cfg.fsdp)
-    gspecs = shd.with_prefix(pspecs, "pod")                  # (G, ...) params
-    dspecs = shd.with_prefix(pspecs, "pod", "data")          # (G, Ce, ...)
-
-    up = make_compressor(fl.uplink_compressor, fraction=fl.topk_fraction,
-                         block=fl.qsgd_block)
-    pod_comp = make_compressor(fl.pod_compressor, block=fl.qsgd_block)
-
-    nparams = [int(np.prod(d.shape)) for d in
-               jax.tree.leaves(model.defs, is_leaf=lambda x: hasattr(x, "logical"))]
-    terms = {
-        "edge_wire": sum(up.wire_bits(n) for n in nparams) / 8.0 * Ce * G,
-        "cloud_wire": sum(pod_comp.wire_bits(n) for n in nparams) / 8.0 * G,
-        "dense": sum(32.0 * n for n in nparams) / 8.0 * Ce * G,
-    }
-
-    # ------------------------------------------------------------------ agg
-    def _agg_edge(deltas, weights, rng):
-        """Edge hop: within-pod aggregation. deltas (G, Ce, ...), weights
-        (G, Ce) replicated -> per-pod mean delta (G, ...)."""
-        def body(dtree, w):
-            gi = jax.lax.axis_index("pod")
-            ci = jax.lax.axis_index("data")
-            out = []
-            for li, leaf in enumerate(jax.tree.leaves(dtree)):
-                flat = leaf.reshape(-1).astype(jnp.float32)
-                r = jax.random.fold_in(jax.random.fold_in(rng, li),
-                                       gi * Ce + ci)
-                if up.is_identity:
-                    contrib = w[gi, ci] * flat
-                    edge = jax.lax.psum(contrib, "data") / \
-                        jnp.maximum(jax.lax.psum(w[gi, ci], "data"), 1e-9)
-                else:
-                    payload, _ = up.encode(up.init(flat.shape), r, flat)
-                    gath = jax.lax.all_gather(payload, "data")
-                    dec = jax.vmap(lambda q: up.decode(q, flat.shape[0]))(gath)
-                    wrow = w[gi]
-                    edge = (wrow[:, None] * dec).sum(0) / \
-                        jnp.maximum(wrow.sum(), 1e-9)
-                out.append(edge.reshape((1,) + leaf.shape[2:]).astype(leaf.dtype))
-            return jax.tree.unflatten(jax.tree.structure(dtree), out)
-
-        return shard_map(body, mesh=mesh, in_specs=(dspecs, P()),
-                         out_specs=gspecs, check_vma=False)(deltas, weights)
-
-    def _sync_models(params, rng):
-        """Cloud hop: periodic *model* averaging across pods (FedPAQ /
-        Hier-Local-QSGD), quantised with ``pod_compressor``. All pods leave
-        with the identical synced model."""
-        def body(ptree):
-            out = []
-            for li, leaf in enumerate(jax.tree.leaves(ptree)):
-                flat = leaf.reshape(-1).astype(jnp.float32)
-                r = jax.random.fold_in(rng, li)
-                if pod_comp.is_identity:
-                    synced = jax.lax.pmean(flat, "pod")
-                else:
-                    pay, _ = pod_comp.encode(
-                        pod_comp.init(flat.shape),
-                        jax.random.fold_in(r, jax.lax.axis_index("pod")), flat)
-                    gath = jax.lax.all_gather(pay, "pod")
-                    dec = jax.vmap(lambda q: pod_comp.decode(
-                        q, flat.shape[0]))(gath)
-                    synced = dec.mean(0)
-                out.append(synced.reshape(leaf.shape).astype(leaf.dtype))
-            return jax.tree.unflatten(jax.tree.structure(ptree), out)
-
-        return shard_map(body, mesh=mesh, in_specs=(gspecs,),
-                         out_specs=gspecs, check_vma=False)(params)
-
-    # ------------------------------------------------------------------ step
-    def _make_step(cloud: bool):
-        def step_fn(state, batch):
-            params, sos, rng, rnd = state
-            r_loc, r_up, r_next = jax.random.split(rng, 3)
-
-            def client_upd(params_g, batch_c, r):
-                lr = fl.local_lr
-                loss_fn = lambda p: model.loss(p, batch_c, chunk=chunk)[0]
-
-                def one(p_c, _):
-                    loss, g = jax.value_and_grad(loss_fn)(p_c)
-                    p_c = jax.tree.map(
-                        lambda a, g_: (a.astype(jnp.float32)
-                                       - lr * g_.astype(jnp.float32)
-                                       ).astype(a.dtype), p_c, g)
-                    return p_c, loss
-                p_fin, losses = jax.lax.scan(one, params_g, None,
-                                             length=fl.local_steps)
-                delta = jax.tree.map(
-                    lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-                    p_fin, params_g)
-                return delta, losses.mean()
-
-            rngs = jax.random.split(r_loc, G * Ce).reshape(G, Ce, -1)
-            model_batch = {k: v for k, v in batch.items() if k != "sizes"}
-            deltas, losses = jax.vmap(lambda pg, bg, rg: jax.vmap(
-                lambda bc, rc: client_upd(pg, bc, rc))(bg, rg))(
-                params, model_batch, rngs)
-
-            weights = batch.get("sizes", jnp.ones((G, Ce), jnp.float32))
-            agg = _agg_edge(deltas, weights, r_up)
-
-            # per-pod server update (vmap-free: tree ops broadcast over G)
-            new_params, new_sos = server_opt.apply(fl, params, agg, sos)
-            if cloud:   # periodic model averaging across pods
-                new_params = _sync_models(new_params,
-                                          jax.random.fold_in(r_up, 99))
-            wire = terms["edge_wire"] + (terms["cloud_wire"] if cloud else 0.0)
-            metrics = {
-                "loss": losses.mean(),
-                "ledger": CommLedger(
-                    uplink_wire=jnp.float32(wire),
-                    uplink_entropy=jnp.float32(wire),
-                    downlink_wire=jnp.float32(0.0),
-                    uplink_dense=jnp.float32(terms["dense"]),
-                    downlink_dense=jnp.float32(0.0)),
-                "pod_divergence": _pod_divergence(new_params),
-            }
-            return (new_params, new_sos, r_next, rnd + 1), metrics
-        return step_fn
-
-    def _pod_divergence(params):
-        """Mean squared distance of per-pod models from their mean — the
-        periodic-averaging 'staleness' the cloud hop resets.
-
-        Probed on a fixed small slice of the largest leaf: an exact
-        full-parameter version costs a full-model pod all-reduce per round
-        (measured: +16.4 GB/dev on qwen32b — more than the FL wire itself),
-        so the metric must not dominate the step it measures."""
-        leaves = sorted(jax.tree.leaves(params), key=lambda l: -l.size)
-        probe = leaves[0].reshape(leaves[0].shape[0], -1)[:, :4096]
-        probe = probe.astype(jnp.float32)
-        return jnp.mean((probe - probe.mean(0, keepdims=True)) ** 2)
-
-    def init_fn(rng):
-        params = model.init(rng)
-        params = jax.tree.map(
-            lambda p: jnp.broadcast_to(p, (G,) + p.shape), params)
-        sos = server_opt.init_state(fl.server_opt, params)
-        return (params, sos, jax.random.PRNGKey(fl.seed), jnp.zeros((), jnp.int32))
-
-    state_specs = (gspecs, {k: gspecs for k in server_opt.state_keys(fl.server_opt)},
-                   P(), P())
-    state_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
-                                   is_leaf=lambda x: isinstance(x, P))
-
+    engine = make_round_engine(model, fl, Topology.hier(fl.sync_every),
+                               mesh=mesh, chunk=chunk)
     return HierFLStep(
-        init_fn=init_fn,
-        step_edge=_make_step(cloud=False),
-        step_cloud=_make_step(cloud=True),
-        state_shardings=state_shardings,
-        n_pods=G, clients_per_pod=Ce, terms=terms,
+        init_fn=engine.init_fn,
+        step_edge=engine.programs["edge"],
+        step_cloud=engine.programs["cloud"],
+        state_shardings=engine.state_shardings,
+        n_pods=engine.aux["n_pods"],
+        clients_per_pod=engine.aux["clients_per_pod"],
+        terms=engine.terms,
+        engine=engine,
     )

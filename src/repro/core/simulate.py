@@ -1,13 +1,16 @@
-"""Single-device FL simulator — same round semantics as ``federated.py``
-(local update -> selection -> compress/decompress -> server opt -> ledger)
-but with the client count decoupled from the mesh (plain vmap, no shard_map).
+"""Single-device FL simulator — the ``Topology.sim`` binding of the
+RoundEngine: identical round semantics to ``federated.py`` (the two share
+the engine's hop sequence verbatim) but with the client count decoupled
+from the mesh (plain vmap, no shard_map).
 
 This is the *experiment* path: the paper-faithful convergence reproductions
 (benchmarks/, examples/) run here on CPU with dozens of clients, while
 ``federated.make_fl_train_step`` is the *deployment* path where clients map
-onto mesh axes and compression rides the collectives. Both share
-``_client_update``, the compressor registry, selection and the ledger — so a
-claim validated here transfers to the deployed step.
+onto mesh axes and compression rides the collectives. Both run the same
+``RoundProgram`` hops — only the wire hop differs — so a claim validated
+here transfers to the deployed step. The sim topology additionally enables
+the simulation-only hops: FedDANE's gradient round and CMFL relevance
+filtering.
 """
 from __future__ import annotations
 
@@ -15,12 +18,9 @@ import dataclasses
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import selection as sel, server_opt
-from repro.core.aggregation import comm_state_init
-from repro.core.federated import _client_update, ledger_terms
-from repro.core.types import CommLedger, FLConfig, FLState
+from repro.core.engine import Topology, make_round_engine
+from repro.core.types import FLConfig
 from repro.models.model import Model
 
 
@@ -30,148 +30,18 @@ class SimFL:
     step_fn: Any           # jit'd (state, batch) -> (state, metrics)
     n_clients: int
     terms: dict
+    engine: Any = None     # the underlying RoundEngine (for run_rounds)
 
 
 def make_sim_step(model: Model, fl: FLConfig, n_clients: int,
                   chunk: int = 64) -> SimFL:
-    C = n_clients
-    terms, up, down = ledger_terms(model, fl)
-    scaffold = fl.algorithm == "scaffold"
-    stateful = up.stateful
-
-    def init_fn(rng):
-        params = model.init(rng)
-        zc = lambda: jax.tree.map(
-            lambda p: jnp.zeros((C,) + p.shape, jnp.float32), params)
-        zf = lambda: jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        return FLState(
-            params=params,
-            server_opt_state=server_opt.init_state(fl.server_opt, params),
-            control=zf() if scaffold else None,
-            client_controls=zc() if scaffold else None,
-            comm_state=comm_state_init(up, params, C) if stateful else None,
-            rng=jax.random.PRNGKey(fl.seed),
-            round=jnp.zeros((), jnp.int32),
-            prev_delta=zf() if fl.cmfl_threshold > 0 else None,
-        )
-
-    def step_fn(state: FLState, batch):
-        rng, r_down, r_sel, r_up, r_next = jax.random.split(state.rng, 5)
-
-        params = state.params
-        if not down.is_identity:
-            params = jax.tree.map(
-                lambda p: down.roundtrip(r_down, p.reshape(-1).astype(
-                    jnp.float32)).reshape(p.shape).astype(p.dtype), params)
-
-        ctrl = state.control if scaffold else None
-        rngs = jax.random.split(rng, C)
-        model_batch = {k: v for k, v in batch.items()
-                       if k not in ("sizes", "resources")}
-
-        # FedDANE [49]: one extra communication round — aggregate the global
-        # gradient at w before the corrected local solves (ledger counts 2x)
-        gg = None
-        if fl.algorithm == "feddane":
-            g_each = jax.vmap(lambda b: jax.grad(
-                lambda p: model.loss(p, b, chunk=chunk)[0])(params))(
-                model_batch)
-            gg = jax.tree.map(lambda g: g.astype(jnp.float32).mean(0), g_each)
-
-        if scaffold:
-            deltas, losses, first_losses, new_ci = jax.vmap(
-                lambda b, r, ci: _client_update(model, fl, params, b, r,
-                                                ctrl, ci, chunk))(
-                model_batch, rngs, state.client_controls)
-        else:
-            deltas, losses, first_losses, _ = jax.vmap(
-                lambda b, r: _client_update(model, fl, params, b, r,
-                                            None, None, chunk,
-                                            global_grad=gg))(
-                model_batch, rngs)
-            new_ci = None
-
-        sizes = batch.get("sizes", jnp.ones((C,), jnp.float32))
-        resources = batch.get("resources", jnp.ones((C, 4), jnp.float32))
-        weights = sel.select(fl, r_sel, losses=first_losses,
-                             resources=resources, sizes=sizes)
-
-        # CMFL [35]: drop updates whose sign-agreement with the previous
-        # global update falls below the threshold (they are "irrelevant" and
-        # never uploaded — the ledger sees the reduced n_sel)
-        if fl.cmfl_threshold > 0:
-            d_flat = jnp.concatenate([l.reshape(C, -1) for l in
-                                      jax.tree.leaves(deltas)], axis=1)
-            p_flat = jnp.concatenate([l.reshape(-1) for l in
-                                      jax.tree.leaves(state.prev_delta)])
-            rel = (jnp.sign(d_flat) == jnp.sign(p_flat)[None, :]) \
-                .mean(axis=1)
-            rel = jnp.where(state.round == 0, 1.0, rel)   # warm-up round
-            weights = weights * (rel >= fl.cmfl_threshold)
-        n_sel = (weights > 0).sum().astype(jnp.float32)
-        wsum = jnp.maximum(weights.sum(), 1e-9)
-
-        # encode each client's leaf, decode, weighted mean — the pipeline
-        # owns its correction state (EF residual / DGC momentum), vmapped
-        # over clients alongside the deltas
-        d_leaves, dtree = jax.tree.flatten(deltas)
-        agg_leaves, st_leaves = [], []
-        for li, leaf in enumerate(d_leaves):
-            shape = leaf.shape[1:]
-            flat = leaf.reshape(C, -1).astype(jnp.float32)
-            rs = jax.vmap(lambda r: jax.random.fold_in(r, li))(rngs)
-            if stateful:
-                def one(x, r, st):
-                    payload, nst = up.encode(st, r, x)
-                    return up.decode(payload, x.shape[0]), nst
-                dec, nst = jax.vmap(one)(flat, rs, state.comm_state[li])
-                st_leaves.append(nst)
-            else:
-                def one(x, r):
-                    payload, _ = up.encode(up.init(x.shape), r, x)
-                    return up.decode(payload, x.shape[0])
-                dec = jax.vmap(one)(flat, rs)
-            agg_leaves.append(((weights[:, None] * dec).sum(0) / wsum)
-                              .reshape(shape))
-        agg = jax.tree.unflatten(dtree, agg_leaves)
-        new_comm = tuple(st_leaves) if stateful else None
-
-        if scaffold:
-            selmask = (weights > 0).astype(jnp.float32)
-            new_ci = jax.tree.map(
-                lambda new, old: jnp.where(
-                    selmask.reshape((C,) + (1,) * (new.ndim - 1)) > 0,
-                    new, old), new_ci, state.client_controls)
-            dci = jax.tree.map(lambda a, b: ((weights[:, None].reshape(
-                (C,) + (1,) * (a.ndim - 1)) * (a - b)).sum(0) / wsum),
-                new_ci, state.client_controls)
-            control = jax.tree.map(lambda c, d: c + (n_sel / C) * d,
-                                   state.control, dci)
-        else:
-            control = None
-
-        agg = jax.tree.map(lambda a, p: a.astype(jnp.float32), agg,
-                           state.params)
-        new_params, new_sos = server_opt.apply(fl, state.params, agg,
-                                               state.server_opt_state)
-        ledger = CommLedger(
-            uplink_wire=n_sel * terms["up_wire"],
-            uplink_entropy=n_sel * terms["up_entropy"],
-            downlink_wire=n_sel * terms["down_wire"],
-            uplink_dense=n_sel * terms["dense"],
-            downlink_dense=n_sel * terms["dense"])
-        metrics = {"loss": (weights * losses).sum() / wsum,
-                   "loss_all": losses.mean(), "selected": n_sel,
-                   "ledger": ledger}
-        new_prev = agg if fl.cmfl_threshold > 0 else None
-        return FLState(params=new_params, server_opt_state=new_sos,
-                       control=control, client_controls=new_ci,
-                       comm_state=new_comm, rng=r_next,
-                       round=state.round + 1, prev_delta=new_prev), metrics
-
-    return SimFL(init_fn=init_fn, step_fn=jax.jit(step_fn),
-                 n_clients=C, terms=terms)
+    engine = make_round_engine(model, fl, Topology.sim(n_clients),
+                               chunk=chunk)
+    return SimFL(init_fn=engine.init_fn,
+                 step_fn=jax.jit(engine.round_fn),
+                 n_clients=engine.n_clients,
+                 terms=engine.terms,
+                 engine=engine)
 
 
 def evaluate(model: Model, params, batch, chunk=64) -> float:

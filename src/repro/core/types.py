@@ -191,6 +191,10 @@ class FLConfig:
     qsgd_block: int = 2048            # per-block scale granularity
     error_feedback: bool = True       # wrap biased pipelines in error_feedback()
     dgc_momentum: float = 0.0         # >0: wrap in momentum_correction() (DGC)
+    dgc_warmup_rounds: int = 0        # >0: DGC warm-up — the effective top-k
+                                      # fraction anneals exponentially from
+                                      # topk_fraction^(1/(W+1)) to
+                                      # topk_fraction over W rounds
 
     # §III.B.2 client selection
     selection: str = "all"            # all | random | power_of_choice | multi_criteria

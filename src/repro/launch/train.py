@@ -3,8 +3,12 @@
     PYTHONPATH=src python -m repro.launch.train --arch paper_lm \
         --rounds 20 --compressor qsgd8 [--hierarchical] [--devices 8]
 
-On real TPU hardware omit --devices (uses the actual topology). On CPU,
---devices N simulates an N-device host for the mesh (set before jax init).
+Rounds run through the RoundEngine's scan driver (``run_rounds``): ``--chunk``
+rounds are compiled into one donated-argument ``jax.lax.scan``, so the hot
+path pays one dispatch per chunk instead of per round (``--chunk 1`` falls
+back to per-round stepping for debugging). On real TPU hardware omit
+--devices (uses the actual topology). On CPU, --devices N simulates an
+N-device host for the mesh (set before jax init).
 """
 import argparse
 import os
@@ -30,6 +34,8 @@ def _parse():
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (CPU dry runs)")
     ap.add_argument("--model-parallel", type=int, default=2)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="rounds per compiled scan (run_rounds)")
     ap.add_argument("--checkpoint", default="")
     return ap.parse_args()
 
@@ -45,6 +51,7 @@ def main():
     import jax.numpy as jnp
     from repro import checkpoint
     from repro.configs.registry import get_arch
+    from repro.core.engine import RoundRunner
     from repro.core.federated import make_fl_train_step
     from repro.core.hierarchical import make_hier_fl_train_step
     from repro.core.types import FLConfig
@@ -73,15 +80,12 @@ def main():
 
     if args.hierarchical:
         step = make_hier_fl_train_step(model, fl, mesh, chunk=args.seq)
-        state = step.init_fn(jax.random.PRNGKey(0))
         G, Ce = step.n_pods, step.clients_per_pod
         C = G * Ce
-        se, sc = jax.jit(step.step_edge), jax.jit(step.step_cloud)
     else:
         step = make_fl_train_step(model, fl, mesh, chunk=args.seq)
-        state = step.init_fn(jax.random.PRNGKey(0))
         C = step.n_clients
-        jstep = jax.jit(step.step_fn)
+    state = step.init_fn(jax.random.PRNGKey(0))
 
     data = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=C,
                          seq_len=args.seq,
@@ -90,24 +94,37 @@ def main():
     ev = eval_batch(data, jax.random.PRNGKey(99), batch_size=4)
     evl = jax.jit(lambda p: model.loss(p, ev, chunk=args.seq)[0])
 
-    for r in range(args.rounds):
+    def data_fn(r):
         b = sample_round(data, jax.random.fold_in(jax.random.PRNGKey(1), r))
         if args.hierarchical:
-            batch = {k: v.reshape((G, Ce) + v.shape[1:]) for k, v in b.items()
-                     if k in ("tokens", "labels", "mask")}
-            cloud = (r + 1) % args.sync_every == 0
-            state, m = (sc if cloud else se)(state, batch)
-            params = jax.tree.map(lambda x: x[0], state[0])
-        else:
-            state, m = jstep(state, b)
-            params = state.params
-        led = m["ledger"]
-        print(f"round {r:>3} loss={float(m['loss']):.3f} "
-              f"eval={float(evl(params)):.3f} "
-              f"up={float(led.uplink_wire)/1e6:.2f}MB "
-              f"ratio={float(led.compression_ratio()):.1f}x", flush=True)
+            return {k: v.reshape((G, Ce) + v.shape[1:]) for k, v in b.items()
+                    if k in ("tokens", "labels", "mask")}
+        return b
+
+    def global_params(state):
+        p = state.params
+        return jax.tree.map(lambda x: x[0], p) if args.hierarchical else p
+
+    # ONE runner for the whole run — its compiled chunk scan is reused
+    # across eval windows (one compilation per chunk shape)
+    chunk = max(1, args.chunk)
+    runner = RoundRunner(step.engine, data_fn, chunk=chunk)
+    done = 0
+    while done < args.rounds:
+        k = min(chunk, args.rounds - done)
+        state, ms = runner.run(state, k)
+        params = global_params(state)
+        ev_loss = float(evl(params))
+        for i in range(k):
+            led = jax.tree.map(lambda x, i=i: x[i], ms["ledger"])
+            print(f"round {done + i:>3} "
+                  f"loss={float(ms['loss'][i]):.3f} "
+                  f"up={float(led.uplink_wire)/1e6:.2f}MB "
+                  f"ratio={float(led.compression_ratio()):.1f}x", flush=True)
+        print(f"eval@{done + k - 1}: {ev_loss:.3f}", flush=True)
+        done += k
     if args.checkpoint:
-        checkpoint.save(args.checkpoint, params)
+        checkpoint.save(args.checkpoint, global_params(state))
         print("saved", args.checkpoint)
 
 

@@ -173,10 +173,8 @@ def case_hier_and_gossip():
                    uplink_compressor="qsgd8", local_lr=0.01)
     g = make_gossip_step(model, flg, mesh, chunk=16)
     gs = g.init_fn(jax.random.PRNGKey(0))
-    ps, rng, rnd = gs
-    ps = jax.tree.map(lambda a: a + 0.1 * jax.random.normal(
-        jax.random.PRNGKey(9), a.shape, a.dtype), ps)
-    gs = (ps, rng, rnd)
+    gs.params = jax.tree.map(lambda a: a + 0.1 * jax.random.normal(
+        jax.random.PRNGKey(9), a.shape, a.dtype), gs.params)
     gstep = jax.jit(g.step_fn)
     gb = {"tokens": t[0], "labels": t[0], "mask": jnp.ones((2, 2, 16))}
     cons = []
@@ -185,6 +183,60 @@ def case_hier_and_gossip():
         cons.append(float(m["consensus"]))
     assert cons[-1] < cons[0] * 0.7, cons
     print("case_hier_and_gossip OK", divs, cons[:3])
+
+
+def case_ef_residual_on_edge_hop():
+    """RoundEngine EF fix: comm_state threads through the hierarchical edge
+    hop and the gossip mix — under the biased chained pipeline
+    "topk:0.01>>qsgd:8" the error-feedback residuals must be materialised in
+    FLState.comm_state and EVOLVE across rounds on both topologies (they were
+    silently stateless before the engine refactor)."""
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    mesh = mesh3()
+
+    def res_norms(comm_state):
+        return [float(jnp.abs(a).sum()) for st in comm_state
+                for a in jax.tree.leaves(st)]
+
+    # --- hierarchical edge hop --------------------------------------------
+    fl = FLConfig(algorithm="fedavg", local_steps=2,
+                  uplink_compressor="topk:0.01>>qsgd:8", topk_fraction=0.01,
+                  pod_compressor="qsgd8", hierarchical=True, sync_every=2)
+    h = make_hier_fl_train_step(model, fl, mesh, chunk=16)
+    hs = h.init_fn(jax.random.PRNGKey(0))
+    assert hs.comm_state is not None, "edge pipeline must own state"
+    # per-client state grid: (G, Ce) leading dims on every leaf-shaped array
+    lead = jax.tree.leaves(hs.comm_state[0])[0].shape[:2]
+    assert lead == (2, 2), lead
+    assert all(v == 0.0 for v in res_norms(hs.comm_state))
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 2, 2, 16), 0, 96)
+    batch = {"tokens": t, "labels": t, "mask": jnp.ones((2, 2, 2, 16))}
+    se, sc = jax.jit(h.step_edge), jax.jit(h.step_cloud)
+    hs, m1 = se(hs, batch)
+    r1 = res_norms(hs.comm_state)
+    assert sum(r1) > 0.0, "EF residual must be nonzero after the edge hop"
+    hs, _ = sc(hs, batch)
+    r2 = res_norms(hs.comm_state)
+    assert r2 != r1, "EF residual must keep evolving on the cloud round's edge hop"
+    assert np.isfinite(float(m1["loss"]))
+
+    # --- gossip mix --------------------------------------------------------
+    flg = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.01,
+                   uplink_compressor="topk:0.01>>qsgd:8", topk_fraction=0.01)
+    g = make_gossip_step(model, flg, mesh, chunk=16)
+    gs = g.init_fn(jax.random.PRNGKey(0))
+    assert gs.comm_state is not None
+    gb = {"tokens": t[0], "labels": t[0], "mask": jnp.ones((2, 2, 16))}
+    gstep = jax.jit(g.step_fn)
+    gs, gm = gstep(gs, gb)
+    g1 = res_norms(gs.comm_state)
+    assert sum(g1) > 0.0, "EF residual must be nonzero after the gossip mix"
+    gs, gm = gstep(gs, gb)
+    g2 = res_norms(gs.comm_state)
+    assert g2 != g1, "EF residual must keep evolving across mixes"
+    assert np.isfinite(float(gm["loss"]))
+    print("case_ef_residual_on_edge_hop OK", sum(r1), sum(g1))
 
 
 def case_pipeline_chain_agg():

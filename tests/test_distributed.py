@@ -16,6 +16,7 @@ CASES = [
     "ledger_accounting_exact",
     "selection_counts",
     "hier_and_gossip",
+    "ef_residual_on_edge_hop",
     "pipeline_chain_agg",
     "noniid_data_pipeline",
     "compressed_agg_collectives_in_hlo",

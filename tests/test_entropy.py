@@ -1,0 +1,121 @@
+"""Entropy-bits ledger cross-check (ROADMAP follow-up): the pipeline's
+``entropy_bits`` assumes *independent stage coding* — Golomb-coded index gaps
+for sparsifiers, Elias-coded levels for quantizers, 1 bit/sign for ternary.
+This suite codes **actual sampled payloads** with a real Golomb-Rice coder
+(optimal Rice parameter) and Elias-gamma and asserts the estimate sits inside
+a tolerance band of the achieved bits.
+
+Measured bands (Gaussian inputs, n=2^16):
+  * sparsifier index estimates are tight (~±10%);
+  * chained topk>>qsgd *under*-estimates (ratio ~0.7-0.9): the chain's
+    carrier holds the largest-magnitude values, whose quantization levels are
+    large — exactly where Elias-gamma is expensive. The band documents this
+    known optimism of the independent-stage assumption.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import make_compressor
+
+
+# ---------------------------------------------------------------------------
+# reference coders (numpy, slow, exact bit counts)
+# ---------------------------------------------------------------------------
+
+def golomb_rice_bits(idx, n):
+    """Bits to Golomb-Rice-code the sorted index gaps, with the optimal Rice
+    parameter b (unary quotient + 1 stop bit + b remainder bits)."""
+    idx = np.sort(np.asarray(idx, np.int64))
+    gaps = np.diff(idx, prepend=-1)             # first gap = idx[0] + 1
+    return min(float(np.sum(gaps // (1 << b) + 1 + b)) for b in range(24))
+
+
+def elias_gamma_bits(q):
+    """Bits to Elias-gamma-code signed integer levels (zigzag to 1-based)."""
+    q = np.asarray(q, np.int64).ravel()
+    v = 2 * np.abs(q) + (q < 0) + 1
+    return float(np.sum(2 * np.floor(np.log2(v)) + 1))
+
+
+def sign_entropy_bits(sign):
+    """Shannon bound for an arithmetic-coded sign stream."""
+    s = np.asarray(sign).ravel()
+    p = float((s > 0).mean())
+    if p in (0.0, 1.0):
+        return 0.0
+    h = -(p * math.log2(p) + (1 - p) * math.log2(1 - p))
+    return s.size * h
+
+
+def code_payload(payload, n):
+    """Total achieved bits for one encoded payload, recursing into chains."""
+    total = 0.0
+    for k, v in payload.items():
+        if isinstance(v, dict):
+            total += code_payload(v, n)
+        elif k == "idx":
+            arr = np.asarray(v)
+            total += golomb_rice_bits(arr[arr < n], n)
+        elif k == "q":
+            total += elias_gamma_bits(v)
+        elif k == "sign":
+            total += sign_entropy_bits(v)
+        elif k in ("seed", "useed"):
+            total += 64.0
+        else:                                   # scales / mu / raw f32
+            total += 32.0 * np.asarray(v).size
+    return total
+
+
+# ---------------------------------------------------------------------------
+# the cross-check
+# ---------------------------------------------------------------------------
+
+N = 1 << 16
+CASES = [
+    # (spec, band for estimate/achieved)
+    ("topk:0.01", (0.90, 1.15)),                # Golomb formula is tight
+    ("topk:0.05", (0.90, 1.20)),
+    ("stc", (0.90, 1.20)),                      # + 1 bit/sign
+    # SBC's ledger pays Golomb gaps for all k slots, but ~half are dropped
+    # minority-sign slots a real coder would never send — conservative ~1.9x
+    ("sbc", (1.30, 2.30)),
+    # chains: independent-stage estimate is optimistic on the large-value
+    # carrier (Elias-gamma cost grows with level magnitude)
+    ("topk:0.01>>qsgd:8", (0.55, 1.20)),
+    ("topk:0.05>>qsgd:4", (0.60, 1.20)),
+]
+
+
+@pytest.mark.parametrize("spec,band", CASES)
+def test_entropy_estimate_within_band_of_real_coder(spec, band):
+    pipe = make_compressor(spec, fraction=0.01)
+    x = jax.random.normal(jax.random.PRNGKey(0), (N,))
+    achieved = np.mean([
+        code_payload(pipe.compress(jax.random.PRNGKey(s), x), N)
+        for s in range(3)])
+    est = pipe.entropy_bits(N)
+    ratio = est / achieved
+    lo, hi = band
+    assert lo <= ratio <= hi, (spec, est, achieved, ratio)
+    # the real coder must beat the dtype-packed wire (that is its point),
+    # and the ledger's entropy column must never exceed the wire column
+    assert achieved <= pipe.wire_bits(N)
+    assert est <= pipe.wire_bits(N)
+
+
+def test_chain_entropy_is_sum_of_stage_estimates():
+    """The ledger's composition law: chain entropy == sum of per-stage
+    meta_entropy over the shrinking carrier lengths (documented independent-
+    stage assumption; the band test above quantifies its error)."""
+    n = N
+    pipe = make_compressor("topk:0.01>>qsgd:8")
+    topk = make_compressor("topk", fraction=0.01)
+    qsgd = make_compressor("qsgd8")
+    k = max(1, round(n * 0.01))
+    assert pipe.entropy_bits(n) == pytest.approx(
+        topk.meta_entropy_bits(n) + qsgd.meta_entropy_bits(k))
