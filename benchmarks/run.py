@@ -108,6 +108,27 @@ def bench_kernels(rounds):
         emit(f"kernels/{name}", kus, ref_us=round(rus, 1),
              note="interpret-mode-on-cpu")
 
+    # stage-level smoke: the kernel wire backend vs pure JAX through the
+    # CommPipeline encode on the largest paper_lm leaf — the exact hot path
+    # the engine runs when FLConfig.backend="kernel" (DESIGN.md §6). Off-TPU
+    # the kernels run interpreted, so kernel_us here gates plumbing+parity,
+    # not speed; on TPU the same rows become the fusion claim.
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    n_max = max(int(np.prod(d.shape))
+                for d in jax.tree.leaves(model.abstract_params()))
+    xl = jax.random.normal(jax.random.PRNGKey(2), (n_max,))
+    for spec in ("qsgd:8", "stc:0.01", "topk:0.01>>qsgd:8", "sketch>>qsgd:8"):
+        row = {}
+        for backend in ("jax", "kernel"):
+            comp = make_compressor(spec, fraction=0.01, backend=backend)
+            enc = jax.jit(lambda r, v, c=comp:
+                          c.encode(c.init(v.shape), r, v)[0])
+            row[backend] = _timeit(enc, jax.random.PRNGKey(3), xl)
+        emit(f"kernels/pipeline_{spec.replace('>>', '+').replace(':', '')}",
+             row["kernel"], jax_us=round(row["jax"], 1), n=n_max,
+             note="interpret-mode-on-cpu")
+
 
 def _fl_run(fl: FLConfig, rounds, het=2.0, clients=8, seed=0, chunk=8):
     """One simulated FL training run through the RoundEngine scan driver:

@@ -59,6 +59,8 @@ class CommTransform:
     name: str = "base"
     biased: bool = False          # needs error feedback when used bare
     carrier_key: Optional[str] = None   # payload entry a next stage refines
+    backend: str = "jax"          # "jax" | "kernel" (Pallas; DESIGN.md §6)
+    kernel_capable: bool = False  # stage has a Pallas-backed encode path
 
     # --- pipeline state ----------------------------------------------------
     def init(self, shape: Sequence[int]) -> PyTree:
@@ -140,16 +142,23 @@ class Identity(CommTransform):
 
 
 # ---------------------------------------------------------------------------
-# Registry + spec-string grammar (DESIGN.md §3)
+# Registry + spec-string grammar (DESIGN.md §3, §6)
 #
 #   spec     := stage (">>" stage)*
-#   stage    := name [":" arg ("," arg)*]
+#   stage    := name [":" arg ("," arg)*] ["@" backend]
 #   name     := legacy registry name (exact match wins) | stage-factory name
 #   arg      := number (int or float)
+#   backend  := "jax" | "kernel"
 #
 # Every pre-pipeline registry name ("qsgd8", "topk", "stc", "none", ...)
-# resolves unchanged, with identical wire_bits.
+# resolves unchanged, with identical wire_bits.  A "@kernel" suffix routes
+# that stage's encode through the Pallas kernels (repro.kernels.ops); the
+# ``backend`` kwarg sets the default for every stage of the spec (stages
+# without a kernel path keep the pure-JAX encode, but an *explicit*
+# "@kernel" on such a stage fails loudly).
 # ---------------------------------------------------------------------------
+
+BACKENDS = ("jax", "kernel")
 
 _REGISTRY: Dict[str, Callable[..., CommTransform]] = {}
 _STAGES: Dict[str, Callable[..., CommTransform]] = {}
@@ -182,17 +191,31 @@ def _num(tok: str):
 
 def _make_stage(token: str, **kw) -> CommTransform:
     token = token.strip()
+    token, at, suffix = token.partition("@")
+    token, explicit = token.strip(), (suffix.strip() if at else None)
+    backend = explicit if explicit is not None else kw.get("backend", "jax")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    kw = dict(kw, backend=backend)
     if token in ("none", "identity", ""):
-        return Identity()
-    name, _, argstr = token.partition(":")
-    name = name.strip()
-    if not argstr and name in _REGISTRY:      # legacy exact names win
-        return _REGISTRY[name](**kw)
-    if name not in _STAGES:
-        known = sorted(set(_REGISTRY) | set(_STAGES))
-        raise KeyError(f"unknown compressor stage {token!r}; have {known}")
-    args = [_num(a) for a in argstr.split(",") if a.strip()] if argstr else []
-    return _STAGES[name](*args, **kw)
+        stage = Identity()
+    else:
+        name, _, argstr = token.partition(":")
+        name = name.strip()
+        if not argstr and name in _REGISTRY:      # legacy exact names win
+            stage = _REGISTRY[name](**kw)
+        elif name not in _STAGES:
+            known = sorted(set(_REGISTRY) | set(_STAGES))
+            raise KeyError(f"unknown compressor stage {token!r}; have {known}")
+        else:
+            args = ([_num(a) for a in argstr.split(",") if a.strip()]
+                    if argstr else [])
+            stage = _STAGES[name](*args, **kw)
+    if explicit == "kernel" and not stage.kernel_capable:
+        raise ValueError(
+            f"stage {token!r} has no kernel backend (kernel-capable stages: "
+            f"topk, qsgd, ternary, sketch — see DESIGN.md §6)")
+    return stage
 
 
 def make_compressor(spec: Optional[str], **kw) -> CommTransform:
@@ -201,7 +224,10 @@ def make_compressor(spec: Optional[str], **kw) -> CommTransform:
     ``make_compressor("qsgd8")`` (legacy names, unchanged), or composed:
     ``make_compressor("topk:0.01>>qsgd:8")`` — top-k support with
     QSGD-quantised values.  ``kw`` (``fraction``, ``block``, ``rows``,
-    ``cols``, ...) supplies defaults that per-stage positional args override.
+    ``cols``, ``backend``, ...) supplies defaults that per-stage positional
+    args / ``@backend`` suffixes override: ``"topk:0.01@kernel>>qsgd:8"``
+    runs the top-k masking pass through the Pallas kernel and QSGD pure;
+    ``backend="kernel"`` selects the kernel path for every capable stage.
     """
     if spec in ("none", None, ""):
         return Identity()

@@ -51,6 +51,10 @@ class Chain(CommTransform):
     def biased(self):
         return any(s.biased for s in self.stages)
 
+    @property
+    def kernel_capable(self):
+        return all(s.kernel_capable for s in self.stages)
+
     def _lens(self, n):
         """Input length seen by each stage: n, then the carrier lengths."""
         ms = [n]

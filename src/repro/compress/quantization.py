@@ -38,26 +38,39 @@ def _blocked(x, block):
 
 
 class QSGD(CommTransform):
-    """Stochastic uniform quantization, per-block max-abs scale, int8 wire."""
+    """Stochastic uniform quantization, per-block max-abs scale, int8 wire.
 
-    def __init__(self, bits=8, block=2048, use_kernel=False):
+    ``backend="kernel"`` routes the fused (scale -> normalise -> stochastic
+    round -> int8) pass through the Pallas kernel (``repro.kernels.qsgd``).
+    The stochastic-rounding uniforms are sampled in the *pure-JAX blocked
+    layout* on both backends, so the kernel path is bit-exact against the
+    reference (tests/test_kernel_parity.py)."""
+    kernel_capable = True
+
+    def __init__(self, bits=8, block=2048, backend="jax"):
         assert 2 <= bits <= 8
         self.bits = bits
         self.block = block
         self.levels = 2 ** (bits - 1) - 1        # signed levels
-        self.name = f"qsgd{bits}"
-        self.use_kernel = use_kernel
+        self.backend = backend
+        self.name = f"qsgd{bits}" + ("@kernel" if backend == "kernel" else "")
 
     def encode(self, state, rng, x):
-        if self.use_kernel:
-            from repro.kernels import ops
-            u = jax.random.uniform(rng, x.shape, jnp.float32)
-            q, scale = ops.qsgd_quantize(x, u, self.bits, self.block)
-            return {"q": q, "scale": scale}, state
         xb, nb, _ = _blocked(x.astype(jnp.float32), self.block)
+        u = jax.random.uniform(rng, xb.shape, jnp.float32)
+        if self.backend == "kernel":
+            from repro.kernels import ops
+            n = x.shape[0]
+            # same per-element uniforms as the pure path (pads sit at the
+            # end of the flat vector in both blockings), and the same
+            # short-input-adapted block (xb.shape[1]) — so the kernel
+            # payload SHAPE matches the pure path exactly and a short
+            # chain carrier (k < block) never ships full-width rows
+            q, scale = ops.qsgd_quantize(x, u.reshape(-1)[:n],
+                                         self.bits, xb.shape[1])
+            return {"q": q, "scale": scale}, state
         scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
         y = xb / jnp.maximum(scale, 1e-30) * self.levels
-        u = jax.random.uniform(rng, xb.shape, jnp.float32)
         q = jnp.floor(y + u).astype(jnp.int8)
         return {"q": q, "scale": scale[:, 0]}, state
 
@@ -138,14 +151,17 @@ class HSQ(CommTransform):
         return 1.0 * n + 32.0 * nb               # 1 bit/sign after packing
 
 
-register("qsgd8")(lambda block=2048, **kw: QSGD(8, block))
-register("qsgd4")(lambda block=2048, **kw: QSGD(4, block))
-register("lfl8")(lambda block=2048, **kw: QSGD(8, block))
+register("qsgd8")(lambda block=2048, backend="jax", **kw:
+                  QSGD(8, block, backend))
+register("qsgd4")(lambda block=2048, backend="jax", **kw:
+                  QSGD(4, block, backend))
+register("lfl8")(lambda block=2048, backend="jax", **kw:
+                 QSGD(8, block, backend))
 register("uveq")(lambda block=2048, **kw: UVeQ(4, block))
 register("hsq")(lambda block=2048, **kw: HSQ(block))
 
-register_stage("qsgd")(lambda bits=8, blk=None, block=2048, **kw:
-                       QSGD(int(bits), int(blk or block)))
+register_stage("qsgd")(lambda bits=8, blk=None, block=2048, backend="jax",
+                       **kw: QSGD(int(bits), int(blk or block), backend))
 register_stage("uveq")(lambda bits=4, blk=None, block=2048, **kw:
                        UVeQ(int(bits), int(blk or block)))
 register_stage("hsq")(lambda blk=None, block=2048, **kw: HSQ(int(blk or block)))

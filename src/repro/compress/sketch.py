@@ -63,20 +63,33 @@ class CountSketch(CommTransform):
     compression ratio; leaf-wise operation needs the same scaling.
 
     The flattened sketch is the carrier, so a quantizer can refine it:
-    ``"sketch>>qsgd:8"`` puts int8 sketch buckets on the wire."""
+    ``"sketch>>qsgd:8"`` puts int8 sketch buckets on the wire.
+
+    ``backend="kernel"``: the hash-scatter runs as the one-hot-MXU Pallas
+    kernel. Bucket sums accumulate in a different order (per-CHUNK matmul
+    partials vs one scatter-add), so parity vs pure JAX is bounded-ULP on
+    S, not bit-exact (DESIGN.md §6)."""
     biased = True
     carrier_key = "S"
+    kernel_capable = True
 
-    def __init__(self, rows=5, cols=4096, topk_fraction=0.01, seed=17):
+    def __init__(self, rows=5, cols=4096, topk_fraction=0.01, seed=17,
+                 backend="jax"):
         self.rows, self.cols, self.seed = rows, cols, seed
         self.topk_fraction = topk_fraction
-        self.name = f"sketch{rows}x{cols}"
+        self.backend = backend
+        self.name = f"sketch{rows}x{cols}" + \
+            ("@kernel" if backend == "kernel" else "")
 
     def _cols(self, n):
         return int(min(self.cols, max(8, n // (2 * self.rows))))
 
     def encode(self, state, rng, x):
-        S = sketch(x, self.rows, self._cols(x.shape[0]), self.seed)
+        if self.backend == "kernel":
+            from repro.kernels import ops
+            S = ops.sketch(x, self.rows, self._cols(x.shape[0]), self.seed)
+        else:
+            S = sketch(x, self.rows, self._cols(x.shape[0]), self.seed)
         return {"S": S.reshape(-1)}, state
 
     def decode(self, payload, n):
@@ -94,8 +107,9 @@ class CountSketch(CommTransform):
         return 0.0
 
 
-register("sketch")(lambda rows=5, cols=4096, fraction=0.01, **kw:
-                   CountSketch(rows, cols, fraction))
+register("sketch")(lambda rows=5, cols=4096, fraction=0.01, backend="jax",
+                   **kw: CountSketch(rows, cols, fraction, backend=backend))
 register_stage("sketch")(lambda r=None, c=None, rows=5, cols=4096,
-                         fraction=0.01, **kw:
-                         CountSketch(int(r or rows), int(c or cols), fraction))
+                         fraction=0.01, backend="jax", **kw:
+                         CountSketch(int(r or rows), int(c or cols), fraction,
+                                     backend=backend))

@@ -33,17 +33,35 @@ def _k(n, fraction):
 
 
 class TopK(CommTransform):
+    """``backend="kernel"``: the dense masking pass runs through the fused
+    ``threshold_sparsify`` Pallas kernel; index *extraction* stays in XLA
+    (``lax.top_k`` — TPUs have no in-kernel compaction, DESIGN.md §6).
+    ``top_k`` breaks magnitude ties by ascending index on both the raw and
+    the masked vector, so the kernel path is bit-exact against pure JAX."""
     biased = True
     carrier_key = "vals"
+    kernel_capable = True
 
-    def __init__(self, fraction=0.01):
+    def __init__(self, fraction=0.01, block=2048, backend="jax"):
         self.fraction = fraction
-        self.name = f"topk{fraction:g}"
+        self.block = block
+        self.backend = backend
+        self.name = f"topk{fraction:g}" + \
+            ("@kernel" if backend == "kernel" else "")
 
     def encode(self, state, rng, x):
         n = x.shape[0]
         k = _k(n, self.fraction)
         vals, idx = jax.lax.top_k(jnp.abs(x), k)
+        if self.backend == "kernel":
+            from repro.kernels import ops
+            # ONE top_k for threshold + indices; the fused kernel pass
+            # produces the dense masked vector the payload values are
+            # gathered from (kept[idx] == x[idx] bit-exactly, ties
+            # included). The pass also emits the EF residual — wiring it
+            # into the ErrorFeedback wrapper is the roadmap's TPU HBM win.
+            kept, _ = ops.threshold_sparsify(x, vals[-1], self.block)
+            return {"vals": kept[idx], "idx": idx.astype(jnp.int32)}, state
         return {"vals": x[idx], "idx": idx.astype(jnp.int32)}, state
 
     def decode(self, payload, n):
@@ -63,11 +81,25 @@ class TopK(CommTransform):
 
 
 class Ternary(CommTransform):
-    """Ternarisation to ±mean(|x|) — STC's quantizer, as a chainable stage."""
+    """Ternarisation to ±mean(|x|) — STC's quantizer, as a chainable stage.
+
+    ``backend="kernel"``: signs + the |x| partial sums come from one fused
+    ``ternarize_blocked`` pass. Signs are bit-exact; mu differs from the
+    pure path by reduction *order* only (per-row partials then a row sum vs
+    one flat sum) — the documented bounded-ULP parity class."""
     biased = True
-    name = "ternary"
+    kernel_capable = True
+
+    def __init__(self, block=2048, backend="jax"):
+        self.block = block
+        self.backend = backend
+        self.name = "ternary" + ("@kernel" if backend == "kernel" else "")
 
     def encode(self, state, rng, x):
+        if self.backend == "kernel":
+            from repro.kernels import ops
+            sign, abs_sum = ops.ternarize_signs(x, self.block)
+            return {"mu": abs_sum / x.shape[0], "sign": sign}, state
         mu = jnp.abs(x).mean()
         return {"mu": mu, "sign": jnp.sign(x).astype(jnp.int8)}, state
 
@@ -157,22 +189,29 @@ class RandMask(CommTransform):
         return 64.0
 
 
-def _stc(fraction=0.01):
+def _stc(fraction=0.01, block=2048, backend="jax"):
     from repro.compress.pipeline import chain
-    return chain(TopK(fraction), Ternary())
+    return chain(TopK(fraction, block, backend), Ternary(block, backend))
 
 
-register("topk")(lambda fraction=0.01, **kw: TopK(fraction))
-register("stc")(lambda fraction=0.01, **kw: _stc(fraction))
+register("topk")(lambda fraction=0.01, block=2048, backend="jax", **kw:
+                 TopK(fraction, block, backend))
+register("stc")(lambda fraction=0.01, block=2048, backend="jax", **kw:
+                _stc(fraction, block, backend))
 register("sbc")(lambda fraction=0.01, **kw: SBC(fraction))
 register("randmask")(lambda fraction=0.05, dp_sigma=0.0, **kw:
                      RandMask(fraction, dp_sigma))
 
-register_stage("topk")(lambda frac=None, fraction=0.01, **kw:
-                       TopK(float(frac if frac is not None else fraction)))
-register_stage("ternary")(lambda **kw: Ternary())
-register_stage("stc")(lambda frac=None, fraction=0.01, **kw:
-                      _stc(float(frac if frac is not None else fraction)))
+register_stage("topk")(lambda frac=None, fraction=0.01, block=2048,
+                       backend="jax", **kw:
+                       TopK(float(frac if frac is not None else fraction),
+                            int(block), backend))
+register_stage("ternary")(lambda block=2048, backend="jax", **kw:
+                          Ternary(int(block), backend))
+register_stage("stc")(lambda frac=None, fraction=0.01, block=2048,
+                      backend="jax", **kw:
+                      _stc(float(frac if frac is not None else fraction),
+                           int(block), backend))
 register_stage("sbc")(lambda frac=None, fraction=0.01, **kw:
                       SBC(float(frac if frac is not None else fraction)))
 register_stage("randmask")(lambda frac=None, fraction=0.05, dp_sigma=0.0, **kw:

@@ -132,6 +132,8 @@ class RoundEngine:
     # kept distinct so the dry-run HLO keeps each collective set honest)
     aux: dict = dataclasses.field(default_factory=dict)
     # topology metadata (e.g. hier's n_pods / clients_per_pod)
+    eval_every: int = 1
+    # metrics_fn cadence inside run_rounds (FLConfig.eval_every)
 
 
 # ---------------------------------------------------------------------------
@@ -156,7 +158,7 @@ def uplink_pipeline(fl: FLConfig):
         frac = fl.topk_fraction ** (1.0 / (warmup + 1.0))
     up = make_compressor(fl.uplink_compressor, fraction=frac,
                          block=fl.qsgd_block, rows=fl.sketch_rows,
-                         cols=fl.sketch_cols)
+                         cols=fl.sketch_cols, backend=fl.backend)
     if warmup > 0 and not up.is_identity:
         # the widened capacity must actually reach the wire: specs with an
         # explicit per-stage fraction ("topk:0.01>>...") override the
@@ -164,7 +166,7 @@ def uplink_pipeline(fl: FLConfig):
         at_target = make_compressor(fl.uplink_compressor,
                                     fraction=fl.topk_fraction,
                                     block=fl.qsgd_block, rows=fl.sketch_rows,
-                                    cols=fl.sketch_cols)
+                                    cols=fl.sketch_cols, backend=fl.backend)
         if up.wire_bits(1 << 16) == at_target.wire_bits(1 << 16):
             raise ValueError(
                 "dgc_warmup_rounds needs a fraction-kwarg-driven uplink "
@@ -189,7 +191,8 @@ def _param_sizes(model: Model):
 def ledger_terms(model: Model, fl: FLConfig):
     """Static per-selected-client byte terms for the round ledger."""
     up = uplink_pipeline(fl)
-    down = make_compressor(fl.downlink_compressor, block=fl.qsgd_block)
+    down = make_compressor(fl.downlink_compressor, block=fl.qsgd_block,
+                           backend=fl.backend)
     sizes = _param_sizes(model)
     # SCAFFOLD ships control variates, FedDANE ships a gradient round: 2x
     scaff = 2.0 if fl.algorithm in ("scaffold", "feddane") else 1.0
@@ -623,7 +626,8 @@ def _build_hier(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
     # edge hop uses the full uplink pipeline (EF / DGC wrappers included —
     # comm_state threads through the edge hop, closing the stateless gap)
     up = uplink_pipeline(fl)
-    pod_comp = make_compressor(fl.pod_compressor, block=fl.qsgd_block)
+    pod_comp = make_compressor(fl.pod_compressor, block=fl.qsgd_block,
+                               backend=fl.backend)
     stateful = up.stateful
 
     nparams = _param_sizes(model)
@@ -858,7 +862,7 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
             "biased pipelines) instead")
     comp = make_compressor(fl.uplink_compressor, fraction=fl.topk_fraction,
                            block=fl.qsgd_block, rows=fl.sketch_rows,
-                           cols=fl.sketch_cols)
+                           cols=fl.sketch_cols, backend=fl.backend)
     if comp.biased and fl.error_feedback:
         comp = error_feedback(comp)
     stateful = comp.stateful
@@ -1010,22 +1014,54 @@ def make_round_engine(model: Model, fl: FLConfig, topology: Topology,
     are thin wrappers over this."""
     if topology.kind == "star":
         assert mesh is not None, "star topology needs a mesh"
-        return _build_star(model, fl, topology, mesh, chunk)
-    if topology.kind == "hier":
+        engine = _build_star(model, fl, topology, mesh, chunk)
+    elif topology.kind == "hier":
         assert mesh is not None, "hier topology needs a mesh"
-        return _build_hier(model, fl, topology, mesh, chunk)
-    if topology.kind == "gossip":
+        engine = _build_hier(model, fl, topology, mesh, chunk)
+    elif topology.kind == "gossip":
         assert mesh is not None, "gossip topology needs a mesh"
-        return _build_gossip(model, fl, topology, mesh, chunk)
-    if topology.kind == "sim":
+        engine = _build_gossip(model, fl, topology, mesh, chunk)
+    elif topology.kind == "sim":
         assert topology.n_clients > 0, "sim topology needs n_clients"
-        return _build_sim(model, fl, topology, chunk)
-    raise ValueError(f"unknown topology kind {topology.kind!r}")
+        engine = _build_sim(model, fl, topology, chunk)
+    else:
+        raise ValueError(f"unknown topology kind {topology.kind!r}")
+    engine.eval_every = max(1, int(fl.eval_every))
+    return engine
 
 
 # ---------------------------------------------------------------------------
 # run_rounds: the scan-compiled multi-round driver
 # ---------------------------------------------------------------------------
+
+def _gated_metrics(metrics_fn, state, metrics, do):
+    """Run ``metrics_fn`` only when ``do`` (a traced bool) — the eval-cadence
+    gate. The skipped branch keeps every base-metric leaf that survives
+    ``metrics_fn`` structurally unchanged (same path/shape/dtype — the round
+    loss and CommLedger must exist every round) and fills eval-only leaves
+    with NaN (0 for integer dtypes), so both ``lax.cond`` branches return one
+    pytree structure."""
+    tmpl = jax.eval_shape(metrics_fn, state, metrics)
+    base = {path: leaf for path, leaf in
+            jax.tree_util.tree_flatten_with_path(metrics)[0]}
+
+    def on(_):
+        return metrics_fn(state, metrics)
+
+    def off(_):
+        leaves = []
+        for path, t in jax.tree_util.tree_flatten_with_path(tmpl)[0]:
+            b = base.get(path)
+            if b is not None and b.shape == t.shape and b.dtype == t.dtype:
+                leaves.append(b)
+            else:
+                fill = (jnp.nan if jnp.issubdtype(t.dtype, jnp.floating)
+                        else 0)
+                leaves.append(jnp.full(t.shape, fill, t.dtype))
+        return jax.tree.unflatten(jax.tree.structure(tmpl), leaves)
+
+    return jax.lax.cond(do, on, off, None)
+
 
 class RoundRunner:
     """Compiles ``chunk`` rounds into one donated-argument ``jax.lax.scan``.
@@ -1034,22 +1070,37 @@ class RoundRunner:
     round program), so batches are sampled *inside* the scan — one XLA
     program per chunk shape, no per-round dispatch or host sync.
     ``metrics_fn(new_state, metrics)`` (optional) appends extra per-round
-    metrics (e.g. a held-out eval loss) inside the compiled program."""
+    metrics (e.g. a held-out eval loss) inside the compiled program.
+
+    ``eval_every`` (default: the engine's ``FLConfig.eval_every``) gates
+    ``metrics_fn`` behind a ``lax.cond`` so the eval cost is paid only on
+    every ``eval_every``-th round — the *last* round of each cadence window
+    (``round % eval_every == eval_every - 1``), so a run whose length is a
+    multiple of the cadence always evaluates its final round. Skipped
+    rounds keep the base round metrics and NaN-fill the eval-only leaves."""
 
     def __init__(self, engine: RoundEngine, data_fn, chunk: int = 8,
-                 metrics_fn=None, donate: bool = True):
+                 metrics_fn=None, donate: bool = True, eval_every=None):
         self.engine = engine
         self.data_fn = data_fn
         self.chunk = max(1, chunk)
         self.metrics_fn = metrics_fn
+        self.eval_every = max(1, int(engine.eval_every if eval_every is None
+                                     else eval_every))
+        ee = self.eval_every
         round_fn = engine.round_fn
 
         def body(state, _):
             batch = data_fn(state.round)
-            state, metrics = round_fn(state, batch)
+            new_state, metrics = round_fn(state, batch)
             if metrics_fn is not None:
-                metrics = metrics_fn(state, metrics)
-            return state, metrics
+                if ee == 1:
+                    metrics = metrics_fn(new_state, metrics)
+                else:
+                    metrics = _gated_metrics(
+                        metrics_fn, new_state, metrics,
+                        state.round % ee == ee - 1)
+            return new_state, metrics
 
         def run_chunk(state, k: int):
             return jax.lax.scan(body, state, None, length=k)
@@ -1084,13 +1135,15 @@ class RoundRunner:
 
 
 def run_rounds(engine: RoundEngine, state, data_fn, n: int, chunk: int = 8,
-               metrics_fn=None, donate: bool = True):
+               metrics_fn=None, donate: bool = True, eval_every=None):
     """Run ``n`` FL rounds, ``chunk`` rounds per compiled scan.
 
     ``data_fn(round_idx) -> batch`` must be traceable (e.g. sampling from
     ``repro.data.synthetic`` with ``jax.random.fold_in(key, round_idx)``);
     it is called inside the scan body. Returns ``(final_state, metrics)``
-    where every metric leaf is stacked over a leading (n,) round dim."""
+    where every metric leaf is stacked over a leading (n,) round dim.
+    ``eval_every`` (default ``FLConfig.eval_every`` via the engine) sets the
+    ``metrics_fn`` cadence — see :class:`RoundRunner`."""
     runner = RoundRunner(engine, data_fn, chunk=chunk, metrics_fn=metrics_fn,
-                         donate=donate)
+                         donate=donate, eval_every=eval_every)
     return runner.run(state, n)

@@ -185,6 +185,10 @@ class FLConfig:
     # "topk>>ternary"; DGC is "topk" + dgc_momentum.
     uplink_compressor: str = "none"
     downlink_compressor: str = "none" # none|lfl8 (LFL: quantized global broadcast)
+    backend: str = "jax"              # encode/decode backend for every wire
+                                      # hop: "jax" (pure) | "kernel" (Pallas;
+                                      # per-stage "@kernel" suffixes in the
+                                      # spec override — DESIGN.md §6)
     topk_fraction: float = 0.01
     sketch_rows: int = 5
     sketch_cols: int = 4096
@@ -209,6 +213,11 @@ class FLConfig:
     # sends); bf16 halves both the delta memory and the uncompressed
     # client-axis collective bytes (§Perf).
     delta_dtype: str = "f32"          # f32 | bf16
+
+    # eval cadence for run_rounds: metrics_fn (the in-scan held-out eval)
+    # runs only every eval_every-th round; skipped rounds carry the base
+    # round metrics and NaN-fill the eval-only leaves (engine.RoundRunner)
+    eval_every: int = 1
 
     # server optimizer (beyond-paper: FedOpt family, Reddi et al. 2020)
     server_opt: str = "fedavg"        # fedavg | fedavgm | fedadam | fedyogi

@@ -6,7 +6,10 @@ TPU hardware. On a real TPU backend the same calls lower to Mosaic.
 
 Each wrapper handles the flat-vector <-> blocked layout plumbing so callers
 (the compressors in ``repro.compress``) see the same flat-f32 interface as
-the pure-JAX paths.
+the pure-JAX paths.  Layout contract (DESIGN.md §6): the kernel grid pads
+the row count up to a multiple of ``ROWS``, but every wrapper slices its
+outputs back to the *logical* payload — ``ceil(n / block)`` rows — before
+returning, so pad lanes never reach the wire or the ledger.
 """
 from __future__ import annotations
 
@@ -35,26 +38,63 @@ def _to_blocked(x, block):
     return jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(nb, block), pad
 
 
+def _logical_rows(n, block):
+    """Rows of the wire payload: pad rows beyond these carry no bytes."""
+    return -(-n // block)
+
+
 def qsgd_quantize(x, u, bits=8, block=2048):
-    """Flat f32 (n,) + uniforms (n,) -> (q int8 (nb,block), scale f32 (nb,))."""
+    """Flat f32 (n,) + uniforms (n,) -> (q int8 (nb,block), scale f32 (nb,))
+    with nb = ceil(n/block) — grid pad rows are sliced off."""
+    n = x.shape[0]
     xb, pad = _to_blocked(x, block)
     ub, _ = _to_blocked(u, block)
     q, scale = _qsgd.qsgd_quantize_blocked(xb, ub, bits=bits,
                                            interpret=_interpret())
-    return q, scale
+    nb = _logical_rows(n, block)
+    return q[:nb], scale[:nb]
+
+
+def _k_from_fraction(n, fraction):
+    """Static-shape-safe top-k count: ``fraction`` may be a traced scalar
+    (e.g. the DGC warm-up's annealed fraction) — the same construction as
+    ``MomentumCorrection._anneal_mask``."""
+    frac = jnp.asarray(fraction, jnp.float32)
+    return jnp.clip(jnp.round(n * frac).astype(jnp.int32), 1, n)
 
 
 def stc_ternarize(x, fraction=0.01, block=2048):
     """Full STC compress: top-k threshold + fused ternarise pass.
-    Returns (code int8 flat (n,), mu f32 scalar)."""
+    Returns (code int8 flat (n,), mu f32 scalar).  ``fraction`` may be a
+    traced value (composes with ``dgc_warmup_rounds`` annealing) — the
+    static-fraction fast path keeps the O(n log k) ``lax.top_k``; only a
+    traced fraction pays the full sort + dynamic order-statistic gather."""
     n = x.shape[0]
-    k = max(1, int(round(n * fraction)))
-    thresh = jax.lax.top_k(jnp.abs(x), k)[0][-1]
+    if isinstance(fraction, (int, float)):
+        k = max(1, min(int(round(n * fraction)), n))
+        thresh = jax.lax.top_k(jnp.abs(x), k)[0][-1]
+    else:
+        k = _k_from_fraction(n, fraction)
+        mag = jnp.sort(jnp.abs(x))[::-1]
+        thresh = mag[k - 1]
     xb, pad = _to_blocked(x, block)
     code, psum, pcnt = _tern.ternarize_blocked(xb, thresh,
                                                interpret=_interpret())
     mu = psum.sum() / jnp.maximum(pcnt.sum(), 1.0)
     return code.reshape(-1)[:n], mu
+
+
+def ternarize_signs(x, block=2048):
+    """The chainable Ternary stage's fused pass: full-support ternarise
+    (threshold 0 keeps everything; flat pads are sign(0) = 0) returning
+    (sign int8 flat (n,), sum|x| f32 scalar).  The caller finalises
+    mu = sum|x| / n over the *logical* length, so pad lanes never enter
+    the mean."""
+    n = x.shape[0]
+    xb, pad = _to_blocked(x, block)
+    code, psum, _ = _tern.ternarize_blocked(xb, jnp.float32(0.0),
+                                            interpret=_interpret())
+    return code.reshape(-1)[:n], psum.sum()
 
 
 def threshold_sparsify(x, thresh, block=2048):
@@ -74,8 +114,6 @@ def sketch(x, rows=5, cols=4096, seed=17):
     xp = jnp.pad(x.astype(jnp.float32), (0, pad))
     a, b = hash_params(rows, seed)
     S = _cs.count_sketch(xp, a, b, rows, cols, interpret=_interpret())
-    if pad:
-        # remove the padded elements' (zero-valued) contributions: zeros add
-        # nothing, so S is already exact.
-        pass
+    # padded elements are zero-valued, so their bucket contributions are
+    # zero and S is already exact.
     return S

@@ -24,6 +24,13 @@ def _parse():
     ap.add_argument("--local-lr", type=float, default=0.2)
     ap.add_argument("--compressor", default="none")
     ap.add_argument("--downlink", default="none")
+    ap.add_argument("--backend", default="jax", choices=["jax", "kernel"],
+                    help="encode/decode backend for every wire hop "
+                         "(kernel = Pallas; interpret mode off-TPU)")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="in-scan held-out-eval cadence in rounds "
+                         "(FLConfig.eval_every); 0 = once per --chunk, "
+                         "matching the pre-cadence host-side eval cost")
     ap.add_argument("--selection", default="all")
     ap.add_argument("--clients-per-round", type=int, default=0)
     ap.add_argument("--server-opt", default="fedavg")
@@ -61,12 +68,14 @@ def main():
 
     cfg = get_arch(args.arch)
     model = Model(cfg)
+    eval_every = args.eval_every if args.eval_every > 0 else max(1, args.chunk)
     fl = FLConfig(algorithm=args.algorithm, local_steps=args.local_steps,
                   local_lr=args.local_lr, uplink_compressor=args.compressor,
-                  downlink_compressor=args.downlink, selection=args.selection,
+                  downlink_compressor=args.downlink, backend=args.backend,
+                  selection=args.selection,
                   clients_per_round=args.clients_per_round,
                   server_opt=args.server_opt, hierarchical=args.hierarchical,
-                  sync_every=args.sync_every)
+                  sync_every=args.sync_every, eval_every=eval_every)
 
     n = jax.device_count()
     mp = min(args.model_parallel, n)
@@ -92,7 +101,6 @@ def main():
                          batch_per_client=args.batch_per_client,
                          heterogeneity=1.5)
     ev = eval_batch(data, jax.random.PRNGKey(99), batch_size=4)
-    evl = jax.jit(lambda p: model.loss(p, ev, chunk=args.seq)[0])
 
     def data_fn(r):
         b = sample_round(data, jax.random.fold_in(jax.random.PRNGKey(1), r))
@@ -101,27 +109,34 @@ def main():
                     if k in ("tokens", "labels", "mask")}
         return b
 
-    def global_params(state):
-        p = state.params
-        return jax.tree.map(lambda x: x[0], p) if args.hierarchical else p
+    def global_params(params):
+        return (jax.tree.map(lambda x: x[0], params) if args.hierarchical
+                else params)
+
+    def metrics_fn(state, m):
+        # held-out eval INSIDE the compiled scan, gated to every
+        # --eval-every-th round by the runner (FLConfig.eval_every)
+        loss = model.loss(global_params(state.params), ev, chunk=args.seq)[0]
+        return dict(m, eval_loss=loss)
 
     # ONE runner for the whole run — its compiled chunk scan is reused
     # across eval windows (one compilation per chunk shape)
     chunk = max(1, args.chunk)
-    runner = RoundRunner(step.engine, data_fn, chunk=chunk)
+    runner = RoundRunner(step.engine, data_fn, chunk=chunk,
+                         metrics_fn=metrics_fn)
     done = 0
     while done < args.rounds:
         k = min(chunk, args.rounds - done)
         state, ms = runner.run(state, k)
-        params = global_params(state)
-        ev_loss = float(evl(params))
         for i in range(k):
             led = jax.tree.map(lambda x, i=i: x[i], ms["ledger"])
             print(f"round {done + i:>3} "
                   f"loss={float(ms['loss'][i]):.3f} "
                   f"up={float(led.uplink_wire)/1e6:.2f}MB "
                   f"ratio={float(led.compression_ratio()):.1f}x", flush=True)
-        print(f"eval@{done + k - 1}: {ev_loss:.3f}", flush=True)
+            ev_loss = float(ms["eval_loss"][i])
+            if ev_loss == ev_loss:          # NaN on cadence-skipped rounds
+                print(f"eval@{done + i}: {ev_loss:.3f}", flush=True)
         done += k
     if args.checkpoint:
         checkpoint.save(args.checkpoint, global_params(state))

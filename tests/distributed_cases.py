@@ -239,6 +239,71 @@ def case_ef_residual_on_edge_hop():
     print("case_ef_residual_on_edge_hop OK", sum(r1), sum(g1))
 
 
+def case_kernel_backend_edge_hop():
+    """Kernel wire backend (FLConfig.backend="kernel") on the hierarchical
+    edge hop: under the biased chained pipeline "topk:0.01>>qsgd:8" the
+    kernel-backed EF residuals must evolve identically to pure JAX across
+    edge and cloud rounds (the chain's kernel path is deterministic and
+    layout padding never leaks into payloads), and so must the per-pod
+    params. "Identically" here is the DESIGN.md §6 engine-scope band: the
+    pallas_call boundary changes XLA's fusion (FMA contraction) of the
+    *surrounding* f32 arithmetic, so single-ULP drift is permitted — the
+    nonzero support must still match exactly. Also checks the gossip mix
+    for the same spec."""
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    mesh = mesh3()
+
+    def assert_ulp_close(a, b, what):
+        a, b = np.asarray(a), np.asarray(b)
+        np.testing.assert_array_equal(a == 0, b == 0, err_msg=what)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-8, err_msg=what)
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 2, 2, 16), 0, 96)
+    batch = {"tokens": t, "labels": t, "mask": jnp.ones((2, 2, 2, 16))}
+
+    def run_hier(backend):
+        fl = FLConfig(algorithm="fedavg", local_steps=2,
+                      uplink_compressor="topk:0.01>>qsgd:8",
+                      topk_fraction=0.01, pod_compressor="qsgd8",
+                      hierarchical=True, sync_every=2, backend=backend)
+        h = make_hier_fl_train_step(model, fl, mesh, chunk=16)
+        hs = h.init_fn(jax.random.PRNGKey(0))
+        se, sc = jax.jit(h.step_edge), jax.jit(h.step_cloud)
+        hs, _ = se(hs, batch)
+        hs, _ = sc(hs, batch)
+        return hs
+
+    a, b = run_hier("jax"), run_hier("kernel")
+    assert a.comm_state is not None and b.comm_state is not None
+    for sa, sb in zip(a.comm_state, b.comm_state):
+        for la, lb in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+            assert_ulp_close(la, lb, "hier EF comm_state")
+    for la, lb in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        assert_ulp_close(la, lb, "hier params")
+    res_norm = sum(float(jnp.abs(l).sum()) for s in b.comm_state
+                   for l in jax.tree.leaves(s))
+    assert res_norm > 0.0, "kernel-backed EF residual must actually evolve"
+
+    def run_gossip(backend):
+        flg = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.01,
+                       uplink_compressor="topk:0.01>>qsgd:8",
+                       topk_fraction=0.01, backend=backend)
+        g = make_gossip_step(model, flg, mesh, chunk=16)
+        gs = g.init_fn(jax.random.PRNGKey(0))
+        gb = {"tokens": t[0], "labels": t[0], "mask": jnp.ones((2, 2, 16))}
+        gs, _ = jax.jit(g.step_fn)(gs, gb)
+        return gs
+
+    ga, gb_ = run_gossip("jax"), run_gossip("kernel")
+    for la, lb in zip(jax.tree.leaves(ga.comm_state),
+                      jax.tree.leaves(gb_.comm_state)):
+        assert_ulp_close(la, lb, "gossip EF comm_state")
+    for la, lb in zip(jax.tree.leaves(ga.params),
+                      jax.tree.leaves(gb_.params)):
+        assert_ulp_close(la, lb, "gossip params")
+    print("case_kernel_backend_edge_hop OK", res_norm)
+
+
 def case_pipeline_chain_agg():
     """Tentpole: a chained CommPipeline ("topk:0.01>>qsgd:8") through the
     shard_map aggregator — state (EF residual) threads via FLState.comm_state,

@@ -17,6 +17,7 @@ CASES = [
     "selection_counts",
     "hier_and_gossip",
     "ef_residual_on_edge_hop",
+    "kernel_backend_edge_hop",
     "pipeline_chain_agg",
     "noniid_data_pipeline",
     "compressed_agg_collectives_in_hlo",

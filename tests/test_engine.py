@@ -97,6 +97,42 @@ def test_round_index_threaded_to_data_fn():
     assert int(state.round) == 6
 
 
+def test_eval_cadence_skips_evals_without_perturbing_params():
+    """FLConfig.eval_every gates metrics_fn behind a cond: changing the
+    cadence must not change the training trajectory (final params bitwise
+    identical), skipped rounds NaN-fill only the eval-only leaves, and the
+    base round metrics (loss, ledger) survive every round."""
+    from repro.data.synthetic import eval_batch
+    ev = eval_batch(DATA, jax.random.PRNGKey(99), batch_size=2)
+
+    def metrics_fn(state, m):
+        return dict(m, eval_loss=MODEL.loss(state.params, ev, chunk=32)[0])
+
+    fl = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.2,
+                  uplink_compressor="qsgd8", eval_every=3)
+    sim = _sim(fl)
+    assert sim.engine.eval_every == 3       # threaded from FLConfig
+
+    n = 6
+    s1, m1 = run_rounds(sim.engine, sim.init_fn(jax.random.PRNGKey(0)),
+                        _data_fn, n, chunk=3, metrics_fn=metrics_fn)
+    s2, m2 = run_rounds(sim.engine, sim.init_fn(jax.random.PRNGKey(0)),
+                        _data_fn, n, chunk=3, metrics_fn=metrics_fn,
+                        eval_every=1)       # override: eval every round
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    ev1 = np.asarray(m1["eval_loss"])
+    ev2 = np.asarray(m2["eval_loss"])
+    # cadence 3 evaluates the last round of each window (rounds 2 and 5)
+    assert np.isfinite(ev1[[2, 5]]).all()
+    assert np.isnan(ev1[[0, 1, 3, 4]]).all()
+    np.testing.assert_array_equal(ev1[[2, 5]], ev2[[2, 5]])
+    # base metrics survive skipped rounds (only eval-only leaves are gated)
+    assert np.isfinite(np.asarray(m1["loss"])).all()
+    assert np.isfinite(np.asarray(m1["ledger"].uplink_wire)).all()
+
+
 # ---------------------------------------------------------------------------
 # topology bindings and the hop contract
 # ---------------------------------------------------------------------------
