@@ -12,6 +12,9 @@ Output: ``name,us_per_call,derived`` CSV (one row per configuration).
                    grid + sketch>>qsgd, bytes-to-target-loss (Pareto points)
   selection        §III.B.2  Power-of-Choice vs random [54]
   hierarchy        §III.B.3  flat vs hierarchical sync cost model [45,73]
+  async            §III.B    AsyncEngine: FedBuff/FedAsync vs sync FedAvg —
+                   virtual wall-clock AND bytes to the same target loss
+                   under a heavy-tailed straggler profile (DESIGN.md §7)
   engine           RoundEngine scan driver (run_rounds) vs Python round loop
   roofline         §Dry-run  per-arch roofline terms (reads experiments/)
 
@@ -303,6 +306,88 @@ def bench_combined(rounds):
     _emit_bytes_to_target("combined", runs)
 
 
+def bench_async(rounds):
+    """Stragglers, not bytes, dominate once the wire is compressed: under a
+    heavy-tailed device-latency profile a synchronous round costs the MAX of
+    the per-client latency draws, while the AsyncEngine's buffered server
+    progresses on the fast clients.  Emits loss-vs-virtual-time and
+    loss-vs-bytes for sync FedAvg vs FedBuff(K) vs FedAsync(K=1) on the
+    identical workload, plus the time-to-target claim row."""
+    from repro.core.async_engine import make_async_step
+    from repro.data.pipeline import device_latency
+
+    clients, profile = 8, "heavy_tail"
+    base = dict(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                uplink_compressor="qsgd8")
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    dcfg = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=clients,
+                         seq_len=48, batch_per_client=4, heterogeneity=2.0,
+                         seed=0)
+    ev = eval_batch(dcfg, jax.random.PRNGKey(99), batch_size=8)
+
+    def data_fn(r):
+        return sample_round(dcfg, jax.random.fold_in(jax.random.PRNGKey(1), r))
+
+    def metrics_fn(state, m):
+        return dict(m, eval_loss=model.loss(state.params, ev, chunk=48)[0])
+
+    # --- sync baseline: barrier per round => round time = max(latencies) ---
+    losses, bytes_cum, us = _fl_run(FLConfig(**base), rounds)
+    resources = sample_round(dcfg, jax.random.PRNGKey(7))["resources"]
+    t, sync_t = 0.0, []
+    for r in range(rounds):
+        lat = device_latency(profile, resources,
+                             jax.random.fold_in(jax.random.PRNGKey(13), r))
+        t += float(jnp.max(lat))
+        sync_t.append(t)
+    runs = {"sync_fedavg": (losses, bytes_cum, sync_t)}
+    emit("async/sync_fedavg", us, loss_final=round(losses[-1], 4),
+         mb=round(bytes_cum[-1] / 1e6, 2), vclock=round(sync_t[-1], 1))
+
+    # --- async runs: same upload budget (rounds*C events) ------------------
+    n_events = rounds * clients
+    for name, K in [("fedbuff_k4", 4), ("fedbuff_k2", 2), ("fedasync_k1", 1)]:
+        fl = FLConfig(**base)
+        a = make_async_step(model, fl, clients, data_fn, buffer_size=K,
+                            staleness_alpha=0.5, latency_profile=profile,
+                            chunk=48)
+        state = a.init_fn(jax.random.PRNGKey(0))
+        t0 = time.perf_counter()
+        state, ms = run_rounds(a.engine, state, data_fn, n_events, chunk=16,
+                               metrics_fn=metrics_fn, eval_every=clients)
+        jax.block_until_ready(ms["clock"])
+        us = (time.perf_counter() - t0) / n_events * 1e6
+        evl = np.asarray(ms["eval_loss"], np.float64)
+        clock = np.asarray(ms["clock"], np.float64)
+        per_event = (np.asarray(ms["ledger"].uplink_wire, np.float64)
+                     + np.asarray(ms["ledger"].downlink_wire, np.float64))
+        cum = np.cumsum(per_event)
+        keep = np.isfinite(evl)                  # eval cadence: every C events
+        runs[name] = (list(evl[keep]), list(cum[keep]), list(clock[keep]))
+        emit(f"async/{name}", us, loss_final=round(evl[keep][-1], 4),
+             mb=round(cum[-1] / 1e6, 2), vclock=round(clock[-1], 1),
+             mean_staleness=round(float(np.asarray(ms["staleness"]).mean()), 2),
+             versions=int(np.asarray(ms["server_version"])[-1]))
+
+    # --- time-to-target + bytes-to-target on the shared loss target --------
+    target = max(l[-1] for l, _, _ in runs.values()) + 0.02
+    tt = {}
+    for name, (l, b, vt) in runs.items():
+        idx = next((i for i, x in enumerate(l) if x <= target), None)
+        tt[name] = (vt[idx] if idx is not None else float("inf"),
+                    b[idx] / 1e6 if idx is not None else float("inf"))
+        emit(f"async/target/{name}", 0.0, target=round(target, 3),
+             vclock_to_target=round(tt[name][0], 1),
+             mb_to_target=round(tt[name][1], 2))
+    best_buff = min(tt["fedbuff_k4"][0], tt["fedbuff_k2"][0])
+    emit("async/claim_fedbuff_beats_sync_time_to_target", 0.0,
+         holds=bool(best_buff < tt["sync_fedavg"][0]),
+         fedbuff_vclock=round(best_buff, 1),
+         sync_vclock=round(tt["sync_fedavg"][0], 1),
+         note="heavy-tail-stragglers-paper_lm")
+
+
 def bench_engine(rounds):
     """RoundEngine acceptance row: run_rounds (scan, chunk=8) vs the Python
     round loop over the jit'd step — identical final params for fixed seed,
@@ -487,6 +572,7 @@ BENCHES = {
     "combined": bench_combined,
     "selection": bench_selection,
     "hierarchy": bench_hierarchy,
+    "async": bench_async,
     "engine": bench_engine,
     "extensions": bench_extensions,
     "roofline": bench_roofline,

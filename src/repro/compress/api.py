@@ -96,6 +96,22 @@ class CommTransform:
     def meta_entropy_bits(self, n: int) -> float:
         return self.meta_bits(n)
 
+    # --- carrier-conditional entropy (DESIGN.md §1) -------------------------
+    def carrier_hint(self, n: int):
+        """Distributional hint about this stage's *carrier* values, consumed
+        by the next stage's conditional entropy model.  None (default) means
+        "assume the generic input distribution"; magnitude-selecting
+        sparsifiers return ``{"kind": "top_tail", "fraction": k/n}`` so a
+        following quantizer knows its input is the large-|x| tail (where
+        Elias-coded levels are expensive)."""
+        return None
+
+    def meta_entropy_bits_given(self, n: int, hint=None) -> float:
+        """``meta_entropy_bits`` conditioned on the preceding stage's carrier
+        hint.  Stages without a conditional model fall back to the
+        unconditional estimate."""
+        return self.meta_entropy_bits(n)
+
     def wire_bits(self, n: int) -> float:
         return self.meta_bits(n) + 32.0 * self.carrier_len(n)
 

@@ -100,8 +100,15 @@ class Chain(CommTransform):
         return sum(s.meta_bits(m) for s, m in zip(self.stages, self._lens(n)))
 
     def meta_entropy_bits(self, n):
-        return sum(s.meta_entropy_bits(m)
-                   for s, m in zip(self.stages, self._lens(n)))
+        # carrier-conditional composition (DESIGN.md §1): each stage's
+        # entropy estimate is conditioned on the *distribution* of the
+        # carrier it receives (e.g. qsgd levels on a top-k carrier are
+        # large, where Elias-gamma is expensive), not just its length
+        total, hint = 0.0, None
+        for s, m in zip(self.stages, self._lens(n)):
+            total += s.meta_entropy_bits_given(m, hint)
+            hint = s.carrier_hint(m)
+        return total
 
 
 def chain(*transforms: CommTransform) -> CommTransform:

@@ -25,6 +25,46 @@ import jax.numpy as jnp
 from repro.compress.api import CommTransform, register, register_stage
 
 
+def _norm_ppf(p: float) -> float:
+    """Standard-normal quantile via bisection on math.erf (host-side, ledger
+    terms only — no scipy in the image)."""
+    lo, hi = 0.0, 12.0
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if 0.5 * (1.0 + math.erf(mid / math.sqrt(2.0))) < p:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def _tail_elias_bits_per_coord(levels: int, f: float, n: int,
+                               block: int) -> float:
+    """Expected Elias-gamma bits per coordinate when the quantizer input is
+    the top-``f`` |x| tail of a Gaussian (a top-k carrier).
+
+    The unconditional QSGD estimate (~bits+1/coord) assumes most levels are
+    tiny; on a top-k carrier every |x| >= the (1-f) quantile while the
+    per-block scale is the block *max*, so levels sit near full range and
+    zigzag+Elias-gamma costs ~2*log2(2*level)+1.  Integrates
+    E[2*log2(2*l+1)] over the truncated-normal tail (the +1 stop bit and
+    the floor in the code length cancel in expectation)."""
+    t = _norm_ppf(1.0 - f / 2.0)                   # P(|x| > t) = f
+    bl = max(1, min(block, n))
+    # per-block scale ~ the max of bl tail draws = the |x| quantile at
+    # tail probability f/bl
+    scale = _norm_ppf(1.0 - f / (2.0 * bl))
+    import numpy as np
+    trapezoid = getattr(np, "trapezoid", None) or np.trapz   # numpy<2 compat
+    xs = np.linspace(t, scale, 513)
+    dens = np.exp(-xs * xs / 2.0)
+    lev = np.minimum(levels * xs / scale, float(levels))
+    bits = 2.0 * np.log2(2.0 * lev + 1.0)
+    z = trapezoid(dens, xs)
+    return float(trapezoid(bits * dens, xs) / z) if z > 0 else 2.0 * math.log2(
+        2.0 * levels + 1.0)
+
+
 def _blocked(x, block):
     n = x.shape[0]
     # adapt to short inputs (e.g. a chain carrier of k << block values):
@@ -89,6 +129,17 @@ class QSGD(CommTransform):
         # Elias-coded QSGD costs ~bits+1 per coordinate; at 8 bits the int8
         # dtype packing is already at least as tight, so take the min.
         return min(float(self.bits + 1), 8.0) * n + 32.0 * nb
+
+    def meta_entropy_bits_given(self, n, hint=None):
+        if not hint or hint.get("kind") != "top_tail":
+            return self.meta_entropy_bits(n)
+        # carrier-conditional model: on a top-k carrier the levels are large
+        # and Elias-gamma can exceed the int8 packing — report the modelled
+        # coder cost instead of the independent-stage optimistic min()
+        nb = -(-n // self.block)
+        bpc = _tail_elias_bits_per_coord(self.levels, float(hint["fraction"]),
+                                         n, self.block)
+        return bpc * n + 32.0 * nb
 
 
 class UVeQ(CommTransform):

@@ -79,6 +79,11 @@ class TopK(CommTransform):
         idx_bits = math.log2(max(n / k, 2.0)) + 2      # Golomb-coded gaps
         return k * idx_bits
 
+    def carrier_hint(self, n):
+        # the carrier is the top-|x| tail: a following quantizer's levels
+        # concentrate near full scale, where Elias-gamma is expensive
+        return {"kind": "top_tail", "fraction": _k(n, self.fraction) / n}
+
 
 class Ternary(CommTransform):
     """Ternarisation to ±mean(|x|) — STC's quantizer, as a chainable stage.

@@ -1,0 +1,375 @@
+"""AsyncEngine — virtual-clock asynchronous FL (DESIGN.md §7).
+
+The survey names asynchronous / semi-asynchronous updating as the third
+communication-efficiency lever next to compression and selection: once the
+wire is compressed, *stragglers* — not bytes — dominate round time.  This
+module opens that workload as a new ``Topology.async_`` binding of the
+RoundEngine: a **virtual-clock event simulator** in which every client slot
+draws a per-dispatch latency from its simulated device profile
+(``data.pipeline.device_latency`` over the FedMCCS resource vectors) and the
+server consumes completions in virtual-time order.
+
+One ``run_rounds`` step == one **server event** (a client upload arriving):
+
+    pop      — argmin over the (C,) next-completion-time vector (no host
+               priority queue; ties break to the lowest client index, so the
+               degenerate constant-latency case pops in client order);
+    arrive   — the completing client's *already-encoded* payload is
+               delivered: its staleness weight ``(1 + tau)^(-alpha)`` is
+               recorded (tau = server_version now minus server_version at
+               its dispatch) and its pending ``comm_state`` row (EF
+               residual / DGC momentum advanced when the payload was
+               produced) is committed;
+    flush    — when the FedBuff buffer holds ``buffer_size`` updates, the
+               server aggregates them staleness-weighted, applies the
+               server optimizer, bumps ``server_version``, and re-dispatches
+               exactly the buffered clients on the new model (contributors
+               receive the model their own updates produced — FedBuff's
+               server-side downlink ordering);
+    ledger   — per-event CommLedger rows carry ``virtual_time`` so
+               bytes-to-target and time-to-target read off one stack.
+
+**Dispatch is where the computation lives**: one batched local-update vmap
+plus one batched CommPipeline encode/decode vmap per flush — the *same*
+computation graph as a synchronous sim round.  A client's pipeline state is
+untouched between its dispatch and its upload (only its own uploads mutate
+its row), so encoding at dispatch is semantically identical to encoding at
+completion: real clients encode before transmitting, and the straggler
+delay is in *delivery*.  This also sidesteps an XLA trap: fusing the wire
+into per-completion events would split the delta -> error-feedback-add
+across programs, and XLA's FMA contraction (which reaches across
+``lax.optimization_barrier``) makes split-program arithmetic differ from
+fused-program arithmetic at ULP level (DESIGN.md §7).
+
+Everything is static-shape inside the scan: the buffer is a (C,)-slotted
+tree masked by ``isinf(next_done)`` (a client uploads at most once per
+dispatch, so client-keyed slots never collide), and the flush runs under a
+``lax.cond``.
+
+**Equivalence contract** (test-enforced, tests/test_async.py): with
+``latency_profile="constant"`` and ``buffer_size == n_clients`` the event
+stream degenerates to synchronous rounds — C pops in client order, one
+flush — and the AsyncEngine reproduces the synchronous ``Topology.sim``
+FedAvg trajectory **bit-exactly** (params AND comm_state): the rng split
+schedule, per-client update rngs, wire encode rngs, aggregation weight
+algebra, and server-opt call are the identical computation graph, and
+``(1 + 0)^(-alpha) == 1.0`` exactly in IEEE arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import server_opt
+from repro.core.aggregation import comm_state_init
+from repro.core.types import CommLedger, FLConfig, FLState
+from repro.data.pipeline import LATENCY_PROFILES, device_latency
+from repro.models.model import Model
+
+_INF = jnp.float32(jnp.inf)
+
+
+def _async_knobs(fl: FLConfig, topo) -> tuple:
+    """Resolve (buffer_size K, staleness alpha, latency profile): explicit
+    Topology fields win, FLConfig fields are the CLI-facing fallback, and
+    K == 0 means full participation (K = C)."""
+    C = topo.n_clients
+    K = topo.buffer_size or fl.async_buffer_size or C
+    if not (1 <= K <= C):
+        raise ValueError(f"async buffer_size must be in [1, n_clients]; "
+                         f"got {K} with C={C}")
+    alpha = (topo.staleness_alpha if topo.staleness_alpha is not None
+             else fl.staleness_alpha)
+    profile = topo.latency_profile or fl.latency_profile
+    if profile not in LATENCY_PROFILES:
+        raise ValueError(f"unknown latency profile {profile!r}; "
+                         f"have {LATENCY_PROFILES}")
+    return int(K), float(alpha), profile
+
+
+def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
+                       chunk: int = 512):
+    """Build the async event executor (a RoundEngine whose ``round_fn`` is
+    one server event).  ``data_fn(version) -> batch`` must be traceable —
+    the engine samples each dispatch generation's client batches *inside*
+    the event scan, keyed on the server version at dispatch (the same
+    function ``run_rounds`` receives, so a degenerate async run and a sync
+    run see identical data)."""
+    # late import: async_engine <-> engine is a module cycle by design
+    # (the builder lives here, the Topology/RoundEngine types live there)
+    from repro.core import engine as eng
+
+    if data_fn is None:
+        raise ValueError("the async topology samples dispatch batches inside "
+                         "the event scan — pass data_fn to make_round_engine")
+    if fl.algorithm not in ("fedavg", "fedsgd", "fedprox"):
+        raise ValueError(
+            f"async topology supports fedavg/fedsgd/fedprox; "
+            f"{fl.algorithm!r} needs synchronous control flow (SCAFFOLD "
+            f"control variates / FedDANE's extra gradient round)")
+    if fl.selection != "all" or fl.cmfl_threshold > 0:
+        raise ValueError("async topology replaces client selection with "
+                         "completion order — use selection='all' and "
+                         "cmfl_threshold=0")
+
+    C = topo.n_clients
+    K, alpha, profile = _async_knobs(fl, topo)
+    terms, up, down = eng.ledger_terms(model, fl)
+    stateful = up.stateful
+
+    def _dispatch(params, batch, comm_state, k_loc, k_down, k_up):
+        """One dispatch generation: downlink + batched local update + the
+        batched CommPipeline wire (encode -> decode) — the synchronous
+        engine's round body verbatim (same ops, same rng indexing, same
+        ``optimization_barrier`` at the wire boundary), so the degenerate
+        case shares its computation graph bit-for-bit.  Returns the (C,)-led
+        f32 *decoded* update rows (what each client's payload will deliver),
+        the (C,) mean losses, and the advanced per-leaf pipeline states."""
+        if not down.is_identity:
+            params = jax.tree.map(
+                lambda p: down.roundtrip(k_down,
+                                         p.reshape(-1).astype(jnp.float32))
+                .reshape(p.shape).astype(p.dtype), params)
+        model_batch = {k: v for k, v in batch.items()
+                       if k not in ("sizes", "resources")}
+        rngs = jax.random.split(k_loc, C)
+        deltas, losses, _, _ = jax.vmap(
+            lambda b, r: eng._client_update(model, fl, params, b, r,
+                                            None, None, chunk))(
+            model_batch, rngs)
+        deltas = jax.lax.optimization_barrier(deltas)
+        rngs_up = jax.random.split(k_up, C)
+        dec_rows, st_rows = [], []
+        for li, leaf in enumerate(jax.tree.leaves(deltas)):
+            shape = leaf.shape[1:]
+            flat = leaf.reshape(C, -1).astype(jnp.float32)
+            rs = jax.vmap(lambda r: jax.random.fold_in(r, li))(rngs_up)
+            if stateful:
+                def one(x, r, st):
+                    payload, nst = up.encode(st, r, x)
+                    return up.decode(payload, x.shape[0]), nst
+                dec, nst = jax.vmap(one)(flat, rs, comm_state[li])
+                st_rows.append(nst)
+            else:
+                def one(x, r):
+                    payload, _ = up.encode(up.init(x.shape), r, x)
+                    return up.decode(payload, x.shape[0])
+                dec = jax.vmap(one)(flat, rs)
+            dec_rows.append(dec.reshape((C,) + shape))
+        dec_tree = jax.tree.unflatten(jax.tree.structure(deltas), dec_rows)
+        return dec_tree, losses, (tuple(st_rows) if stateful else None)
+
+    def init_fn(rng):
+        params = model.init(rng)
+        # generation-0 key schedule == the sync engine's round-0 split
+        k_loc, k_down, k_sel, k_up, k_next = jax.random.split(
+            jax.random.PRNGKey(fl.seed), 5)
+        batch0 = data_fn(jnp.zeros((), jnp.int32))
+        comm0 = comm_state_init(up, params, C) if stateful else None
+        # jit: eager arithmetic (e.g. the E=1 fast-path delta) differs from
+        # the compiled scan's at ULP level via XLA FMA contraction, which
+        # would break the degenerate bit-exactness contract
+        updates, losses, pending = jax.jit(_dispatch)(params, batch0, comm0,
+                                                      k_loc, k_down, k_up)
+        lat = device_latency(profile, batch0["resources"], k_sel)
+        A = {
+            "clock": jnp.zeros((), jnp.float32),
+            "next_done": lat,                      # all C in flight
+            "version": jnp.zeros((C,), jnp.int32),
+            "server_version": jnp.zeros((), jnp.int32),
+            "updates": updates,
+            "buf_w": jnp.zeros((C,), jnp.float32),
+            "losses": losses,
+        }
+        if stateful:
+            A["pending_comm"] = pending
+        return FLState(
+            params=params,
+            server_opt_state=server_opt.init_state(fl.server_opt, params),
+            control=None, client_controls=None,
+            comm_state=comm0,
+            rng=k_next,
+            round=jnp.zeros((), jnp.int32),
+            async_state=A,
+        )
+
+    # ------------------------------------------------------------------ hops
+    def hop_pop(ctx):
+        A = ctx["state"].async_state
+        c = jnp.argmin(A["next_done"])             # ties -> lowest index
+        ctx["c"] = c
+        ctx["clock"] = jnp.maximum(A["clock"], A["next_done"][c])
+        ctx["tau"] = A["server_version"] - A["version"][c]
+        ctx["stale_w"] = (1.0 + ctx["tau"].astype(jnp.float32)) ** (-alpha)
+        ctx["onehot"] = (jnp.arange(C) == c)
+        return ctx
+
+    def hop_arrive(ctx):
+        """Delivery bookkeeping for ONE client: mark its slot in-buffer,
+        record its staleness weight, and commit its pending comm_state row
+        (the EF residual advanced when the payload was produced — only this
+        client's own uploads touch its row, so commit order is safe)."""
+        st, A = ctx["state"], ctx["state"].async_state
+        A2 = dict(A)
+        A2["next_done"] = jnp.where(ctx["onehot"], _INF, A["next_done"])
+        A2["buf_w"] = jnp.where(ctx["onehot"], ctx["stale_w"], A["buf_w"])
+        A2["clock"] = ctx["clock"]
+        if stateful:
+            sel = ctx["onehot"]
+            ctx["new_comm"] = tuple(
+                jax.tree.map(
+                    lambda p, o: jnp.where(
+                        sel.reshape((C,) + (1,) * (o.ndim - 1)), p, o),
+                    A["pending_comm"][li], st.comm_state[li])
+                for li in range(len(st.comm_state)))
+        else:
+            ctx["new_comm"] = None
+        ctx["A"] = A2
+        ctx["fill"] = jnp.isinf(A2["next_done"]).sum().astype(jnp.int32)
+        return ctx
+
+    def hop_flush(ctx):
+        """FedBuff aggregation + next-generation dispatch under lax.cond."""
+        st, A = ctx["state"], ctx["A"]
+        comm = ctx["new_comm"]        # committed rows, incl. this arrival's
+
+        def _merge(mb):
+            return lambda n_, o: jnp.where(
+                mb.reshape((C,) + (1,) * (o.ndim - 1)), n_, o)
+
+        def flush(_):
+            mask = jnp.isinf(A["next_done"]).astype(jnp.float32)
+            new_ver = A["server_version"] + 1
+            # next generation key schedule == the sync engine's next round
+            k_loc, k_down, k_sel, k_up, k_next = jax.random.split(st.rng, 5)
+            nbatch = data_fn(new_ver)
+            # client dataset sizes are generation-invariant (seed-only
+            # tables), so the next generation's batch also provides the
+            # FedAvg weights for the flushing aggregation
+            sizes = nbatch.get("sizes", jnp.ones((C,), jnp.float32))
+            w = sizes * mask
+            wsum = jnp.maximum(w.sum(), 1e-9)
+            w_eff = A["buf_w"] * w
+            # materialize the buffered rows so the weighted mean lowers
+            # exactly like the sync wire's (whose decoded rows also pass
+            # through a barrier before aggregation)
+            buf = jax.lax.optimization_barrier(A["updates"])
+            agg = jax.tree.map(
+                lambda leaf: ((w_eff[:, None] * leaf.reshape(C, -1))
+                              .sum(0) / wsum).reshape(leaf.shape[1:]),
+                buf)
+            new_params, new_sos = server_opt.apply(fl, st.params, agg,
+                                                   st.server_opt_state)
+            loss = (w * A["losses"]).sum() / wsum
+            dec_rows, losses, pending = _dispatch(new_params, nbatch, comm,
+                                                  k_loc, k_down, k_up)
+            lat = device_latency(profile, nbatch["resources"], k_sel)
+            mb = mask > 0
+            A3 = dict(
+                A,
+                updates=jax.tree.map(_merge(mb), dec_rows, A["updates"]),
+                next_done=jnp.where(mb, ctx["clock"] + lat, A["next_done"]),
+                version=jnp.where(mb, new_ver, A["version"]),
+                buf_w=jnp.where(mb, 0.0, A["buf_w"]),
+                losses=jnp.where(mb, losses, A["losses"]),
+                server_version=new_ver,
+            )
+            if stateful:
+                A3["pending_comm"] = tuple(
+                    jax.tree.map(_merge(mb), pending[li],
+                                 A["pending_comm"][li])
+                    for li in range(len(pending)))
+            return (new_params, new_sos, A3, k_next, loss,
+                    mask.sum(), jnp.float32(1.0))
+
+        def wait(_):
+            return (st.params, st.server_opt_state, A, st.rng,
+                    A["losses"].mean(), jnp.float32(0.0), jnp.float32(0.0))
+
+        (params, sos, A3, rng, loss, n_down, flushed) = jax.lax.cond(
+            ctx["fill"] >= K, flush, wait, None)
+        ctx.update(new_params=params, new_sos=sos, A=A3, new_rng=rng,
+                   loss=loss, n_down=n_down, flushed=flushed)
+        return ctx
+
+    def hop_ledger(ctx):
+        # one upload per event; downlink bytes are paid at flush, once per
+        # re-dispatched contributor
+        ctx["ledger"] = CommLedger(
+            uplink_wire=jnp.float32(terms["up_wire"]),
+            uplink_entropy=jnp.float32(terms["up_entropy"]),
+            downlink_wire=ctx["n_down"] * jnp.float32(terms["down_wire"]),
+            uplink_dense=jnp.float32(terms["dense"]),
+            downlink_dense=ctx["n_down"] * jnp.float32(terms["dense"]),
+            virtual_time=ctx["clock"],
+        )
+        return ctx
+
+    def hop_finalize(ctx):
+        st = ctx["state"]
+        ctx["metrics"] = {
+            "loss": ctx["loss"],
+            "clock": ctx["clock"],
+            "staleness": ctx["tau"].astype(jnp.float32),
+            "server_version": ctx["A"]["server_version"],
+            "buffer_fill": (ctx["fill"].astype(jnp.float32)
+                            * (1.0 - ctx["flushed"])),
+            "flushed": ctx["flushed"],
+            "ledger": ctx["ledger"],
+        }
+        ctx["new_state"] = FLState(
+            params=ctx["new_params"], server_opt_state=ctx["new_sos"],
+            control=None, client_controls=None,
+            comm_state=ctx["new_comm"], rng=ctx["new_rng"],
+            round=st.round + 1, async_state=ctx["A"],
+        )
+        return ctx
+
+    program = eng.RoundProgram(topology=topo, hops=(
+        ("pop", hop_pop), ("arrive", hop_arrive),
+        ("flush", hop_flush), ("ledger", hop_ledger),
+        ("finalize", hop_finalize)))
+
+    return eng.RoundEngine(
+        topology=topo, program=program, round_fn=program,
+        init_fn=init_fn, n_clients=C, terms=terms,
+        aux={"buffer_size": K, "staleness_alpha": alpha,
+             "latency_profile": profile, "events_per_generation": K},
+    )
+
+
+# ---------------------------------------------------------------------------
+# convenience binding (mirrors simulate.make_sim_step)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AsyncFL:
+    init_fn: object
+    step_fn: object        # jit'd (state, batch) -> (state, metrics): 1 event
+    n_clients: int
+    buffer_size: int
+    terms: dict
+    engine: object = None
+
+
+def make_async_step(model: Model, fl: FLConfig, n_clients: int, data_fn,
+                    buffer_size: int = 0, staleness_alpha: float = None,
+                    latency_profile: str = None, chunk: int = 64) -> AsyncFL:
+    """Build the async event step.  ``run_rounds(a.engine, state, data_fn,
+    n_events)`` then drives ``n_events`` server events through the scan
+    driver (the per-step batch the runner samples is unused by the async
+    round_fn and dead-code-eliminated by XLA — the engine samples its own
+    dispatch batches keyed on server version)."""
+    from repro.core.engine import Topology, make_round_engine
+    # sentinel knobs (None / "") fall back to the FLConfig fields inside
+    # _async_knobs at build time
+    topo = Topology.async_(n_clients, buffer_size=buffer_size,
+                           staleness_alpha=staleness_alpha,
+                           latency_profile=latency_profile or "")
+    engine = make_round_engine(model, fl, topo, chunk=chunk, data_fn=data_fn)
+    return AsyncFL(init_fn=engine.init_fn, step_fn=jax.jit(engine.round_fn),
+                   n_clients=engine.n_clients,
+                   buffer_size=engine.aux["buffer_size"],
+                   terms=engine.terms, engine=engine)

@@ -62,15 +62,25 @@ PyTree = Any
 class Topology:
     """Which shape the round's transport hops take.
 
-    ``graph`` (gossip) is a tuple of ``(ring_offset, mix_weight)`` neighbour
-    edges; the self-weight is ``1 - sum(weights)`` (doubly stochastic for
-    symmetric offset sets)."""
+    ``graph`` (gossip) is a tuple of ``(edge, mix_weight)`` entries where
+    ``edge`` is either a ring offset (int — every node sends to
+    ``(i+off) % C``) or an explicit permutation tuple of length C (fixed
+    points ``sigma[i] == i`` do not send).  The per-node self-weight is
+    whatever the incoming edge weights leave over; the builder asserts the
+    resulting mixing matrix is doubly stochastic.  Use
+    :func:`expander_graph` / :func:`erdos_renyi_graph` (or the
+    ``Topology.gossip_*`` constructors) for non-ring graphs."""
 
-    kind: str                          # star | hier | gossip | sim
-    n_clients: int = 0                 # sim only (decoupled from mesh)
+    kind: str                          # star | hier | gossip | sim | async
+    n_clients: int = 0                 # sim/async only (decoupled from mesh)
     sync_every: int = 4                # hier only (cloud hop period)
     graph: tuple = ((1, 0.25), (-1, 0.25))   # gossip only
     client_axis: str = ""              # star only ("" = from ArchConfig)
+    buffer_size: int = 0               # async only: FedBuff K (0 = from
+                                       # FLConfig, then C)
+    staleness_alpha: float = None      # async only: (1+tau)^(-alpha) decay
+                                       # (None = from FLConfig)
+    latency_profile: str = ""          # async only ("" = from FLConfig)
 
     @staticmethod
     def star(client_axis: str = "") -> "Topology":
@@ -86,8 +96,127 @@ class Topology:
                         graph=tuple(graph) if graph else ((1, 0.25), (-1, 0.25)))
 
     @staticmethod
+    def gossip_expander(n_clients: int, degree: int = 4) -> "Topology":
+        return Topology.gossip(expander_graph(n_clients, degree))
+
+    @staticmethod
+    def gossip_er(n_clients: int, p: float = 0.5, seed: int = 0) -> "Topology":
+        return Topology.gossip(erdos_renyi_graph(n_clients, p, seed))
+
+    @staticmethod
     def sim(n_clients: int) -> "Topology":
         return Topology(kind="sim", n_clients=n_clients)
+
+    @staticmethod
+    def async_(n_clients: int, buffer_size: int = 0,
+               staleness_alpha: float = None,
+               latency_profile: str = "") -> "Topology":
+        """Virtual-clock asynchronous FL (core.async_engine, DESIGN.md §7):
+        FedBuff buffering (``buffer_size`` K; 1 = FedAsync, 0/C = the
+        degenerate synchronous limit), FedAsync staleness decay
+        ``(1+tau)^(-staleness_alpha)``, per-dispatch latencies drawn from
+        ``latency_profile`` over the FedMCCS device resource vectors.
+        Knobs left at their sentinel (0 / None / \"\") fall back to the
+        ``FLConfig.async_buffer_size / staleness_alpha / latency_profile``
+        fields at engine build time."""
+        return Topology(kind="async", n_clients=n_clients,
+                        buffer_size=buffer_size,
+                        staleness_alpha=staleness_alpha,
+                        latency_profile=latency_profile)
+
+
+# ---------------------------------------------------------------------------
+# Gossip graph constructors + the doubly-stochastic contract
+# ---------------------------------------------------------------------------
+
+def _graph_edges(spec, C: int):
+    """Directed (src, dst) pairs for one graph entry: a ring offset (int) or
+    an explicit permutation tuple (fixed points do not send)."""
+    if isinstance(spec, (int, np.integer)):
+        return [(i, (i + int(spec)) % C) for i in range(C)]
+    sigma = tuple(int(s) for s in spec)
+    if len(sigma) != C or sorted(sigma) != list(range(C)):
+        raise ValueError(f"graph entry {spec!r} is not a permutation of "
+                         f"range({C})")
+    return [(i, sigma[i]) for i in range(C) if sigma[i] != i]
+
+
+def mixing_matrix(graph, C: int) -> np.ndarray:
+    """The dense (C, C) gossip mixing matrix W (row i mixes *into* node i):
+    W[dst, src] += w per edge, and each node keeps whatever its incoming
+    edge weights leave over (per-node self-weight)."""
+    W = np.zeros((C, C))
+    for spec, w in graph:
+        for src, dst in _graph_edges(spec, C):
+            W[dst, src] += float(w)
+    np.fill_diagonal(W, np.diag(W) + 1.0 - W.sum(axis=1))
+    return W
+
+
+def check_doubly_stochastic(W: np.ndarray, atol: float = 1e-6) -> None:
+    """Gossip averaging preserves the model mean and contracts to consensus
+    iff W is doubly stochastic with non-negative entries — checked at engine
+    build time for every graph."""
+    if W.min() < -atol:
+        raise ValueError(f"mixing matrix has negative entries "
+                         f"(min {W.min():.4f}): edge weights too large — "
+                         f"a node's incoming weights must sum to <= 1")
+    for axis, name in ((1, "row"), (0, "column")):
+        s = W.sum(axis=axis)
+        if not np.allclose(s, 1.0, atol=atol):
+            raise ValueError(f"mixing matrix {name} sums deviate from 1 "
+                             f"(max |err| {np.abs(s - 1).max():.4f}) — "
+                             f"graph is not doubly stochastic")
+
+
+def expander_graph(n: int, degree: int = 4) -> tuple:
+    """Circulant power-of-two expander: offsets ±1, ±2, ±4, ... with uniform
+    weights 1/(E+1).  Each offset is a permutation, so the mix is a convex
+    combination of permutation matrices — doubly stochastic by construction —
+    with the log-diameter mixing of the hypercube family."""
+    offs = []
+    j = 0
+    while len(offs) < degree and (1 << j) <= n // 2:
+        o = 1 << j
+        offs.append(o)
+        if len(offs) < degree and (n - o) % n not in offs and n - o != o:
+            offs.append(n - o)        # the symmetric (negative) offset
+        j += 1
+    w = 1.0 / (len(offs) + 1)
+    return tuple((o, w) for o in offs)
+
+
+def erdos_renyi_graph(n: int, p: float = 0.5, seed: int = 0) -> tuple:
+    """Erdős–Rényi G(n, p) gossip graph: sample the undirected edge set,
+    greedily edge-color it into matchings (each an involution permutation —
+    ppermute-able), uniform edge weight 1/(max_degree + 1) so every node's
+    self-weight stays non-negative (Metropolis-style) and W is symmetric
+    doubly stochastic."""
+    rng = np.random.default_rng(seed)
+    upper = np.triu(rng.random((n, n)) < p, 1)
+    edges = list(zip(*np.nonzero(upper)))
+    deg = np.zeros(n, int)
+    for i, j in edges:
+        deg[i] += 1
+        deg[j] += 1
+    if not edges:
+        raise ValueError(f"G({n}, {p}) sample (seed={seed}) has no edges — "
+                         f"raise p or change the seed")
+    w = 1.0 / (deg.max() + 1)
+    # greedy edge coloring: assign each edge the smallest color unused at
+    # either endpoint; each color class is a matching
+    used: list = [set() for _ in range(n)]
+    matchings: list = []
+    for i, j in edges:
+        c = 0
+        while c in used[i] or c in used[j]:
+            c += 1
+        used[i].add(c)
+        used[j].add(c)
+        while len(matchings) <= c:
+            matchings.append(list(range(n)))
+        matchings[c][i], matchings[c][j] = j, i
+    return tuple((tuple(m), w) for m in matchings)
 
 
 # ---------------------------------------------------------------------------
@@ -321,6 +450,11 @@ def _sim_wire(up, C) -> _Wire:
                     payload, _ = up.encode(up.init(x.shape), r, x)
                     return up.decode(payload, x.shape[0])
                 dec = jax.vmap(one)(flat, rs)
+            # materialize the decoded payloads before aggregating — the
+            # AsyncEngine's buffered rows arrive materialized from earlier
+            # events, so the shared weighted-mean must not fuse with the
+            # decode here (bit-exact degenerate equivalence, DESIGN.md §7)
+            dec = jax.lax.optimization_barrier(dec)
             agg_leaves.append(((weights[:, None] * dec).sum(0) / wsum)
                               .reshape(shape))
         agg = jax.tree.unflatten(dtree, agg_leaves)
@@ -425,10 +559,16 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
         return ctx
 
     def hop_wire(ctx):
-        # encode -> transport -> decode -> aggregate; comm_state rides along
+        # encode -> transport -> decode -> aggregate; comm_state rides along.
+        # The barrier materializes the client deltas at the wire boundary —
+        # without it XLA fuses e.g. the E=1 delta multiply into the error-
+        # feedback residual add as an FMA, and the AsyncEngine (which hands
+        # the transport a delta materialized in an earlier event) could
+        # never reproduce the sync trajectory bit-exactly (DESIGN.md §7)
+        deltas = jax.lax.optimization_barrier(ctx["deltas"])
         weights = ctx["weights"]
         n_sel = (weights > 0).sum().astype(jnp.float32)
-        agg, new_comm = wire.aggregate(ctx["deltas"], weights, ctx["r_up"],
+        agg, new_comm = wire.aggregate(deltas, weights, ctx["r_up"],
                                        ctx["state"].comm_state)
         ctx.update(agg=agg, new_comm=new_comm, n_sel=n_sel)
         return ctx
@@ -871,16 +1011,27 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
     pspecs = shd.tree_specs(abs_params, model.logical_axes(), mesh, cfg.fsdp)
     cspecs = shd.with_prefix(pspecs, "data")
 
-    self_w = 1.0 - sum(w for _, w in topo.graph)
-    perms = [([(i, (i + off) % C) for i in range(C)], w)
-             for off, w in topo.graph]
+    # general graphs: ring offsets and/or explicit permutations (expander /
+    # Erdős–Rényi matchings). Every node keeps whatever its incoming edge
+    # weights leave over; the mixing matrix must be doubly stochastic.
+    check_doubly_stochastic(mixing_matrix(topo.graph, C))
+    perms = [(_graph_edges(spec, C), w) for spec, w in topo.graph]
+    # per-node self weight = 1 - sum of weights over edges INTO that node
+    # (un-targeted ppermute destinations receive zeros, so a node skipped
+    # by a matching keeps its own share)
+    self_w_vec = np.full((C,), 1.0)
+    for edges, w in perms:
+        for _, dst in edges:
+            self_w_vec[dst] -= w
+    self_w_vec = jnp.asarray(self_w_vec, jnp.float32)
 
     nparams = _param_sizes(model)
     payload_bytes = sum(comp.wire_bits(n) for n in nparams) / 8.0
+    n_edges = sum(len(edges) for edges, _ in perms)
     terms = {
-        # every client sends its payload along each directed graph edge
-        "mix_wire": payload_bytes * C * len(topo.graph),
-        "dense": sum(32.0 * n for n in nparams) / 8.0 * C * len(topo.graph),
+        # every payload crossing a directed graph edge counts once
+        "mix_wire": payload_bytes * n_edges,
+        "dense": sum(32.0 * n for n in nparams) / 8.0 * n_edges,
     }
 
     comm_specs = (comm_state_specs(comp, abs_params, pspecs, ("data",))
@@ -888,6 +1039,7 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
 
     def mix(params, rng, comm_state):
         def body(ptree, comm):
+            self_w = self_w_vec[jax.lax.axis_index("data")]
             out, st_out = [], []
             for li, leaf in enumerate(jax.tree.leaves(ptree)):
                 flat = leaf.reshape(-1).astype(jnp.float32)
@@ -1006,12 +1158,15 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
 
 def make_round_engine(model: Model, fl: FLConfig, topology: Topology,
                       mesh: Optional[Mesh] = None,
-                      chunk: int = 512) -> RoundEngine:
+                      chunk: int = 512, data_fn=None) -> RoundEngine:
     """Build the round executor for one (model, fl, topology) binding.
 
     The four legacy factories (``make_fl_train_step``,
     ``make_hier_fl_train_step``, ``make_gossip_step``, ``make_sim_step``)
-    are thin wrappers over this."""
+    are thin wrappers over this.  The ``async`` topology additionally needs
+    ``data_fn(version) -> batch`` at build time: its event scan samples each
+    dispatch generation's batches internally, keyed on server version
+    (core.async_engine, DESIGN.md §7)."""
     if topology.kind == "star":
         assert mesh is not None, "star topology needs a mesh"
         engine = _build_star(model, fl, topology, mesh, chunk)
@@ -1024,6 +1179,10 @@ def make_round_engine(model: Model, fl: FLConfig, topology: Topology,
     elif topology.kind == "sim":
         assert topology.n_clients > 0, "sim topology needs n_clients"
         engine = _build_sim(model, fl, topology, chunk)
+    elif topology.kind == "async":
+        assert topology.n_clients > 0, "async topology needs n_clients"
+        from repro.core.async_engine import build_async_engine
+        engine = build_async_engine(model, fl, topology, data_fn, chunk)
     else:
         raise ValueError(f"unknown topology kind {topology.kind!r}")
     engine.eval_every = max(1, int(fl.eval_every))

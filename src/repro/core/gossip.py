@@ -19,7 +19,11 @@ and never crosses the wire (DESIGN.md §5).
 Mixing matrix: symmetric ring  W = I/2 + (L+R)/4  (doubly stochastic), so the
 iterates converge to consensus at the classic 1-λ₂(W) rate; the test suite
 asserts the consensus contraction. Custom graphs: ``Topology.gossip``
-accepts ``(ring_offset, weight)`` edge tuples.
+accepts ``(ring_offset, weight)`` edge tuples and full permutation tuples
+(matchings) — ``engine.expander_graph`` / ``engine.erdos_renyi_graph`` (or
+``Topology.gossip_expander`` / ``Topology.gossip_er``) build power-of-two
+circulant expanders and Erdős–Rényi matching decompositions; every graph
+passes a doubly-stochastic check at engine build time.
 """
 from __future__ import annotations
 

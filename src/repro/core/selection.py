@@ -25,11 +25,14 @@ from repro.core.types import FLConfig
 
 
 def _top_m_mask(scores, m):
+    """Exactly-m selection mask. Rank-based: scatter 1s at the top_k
+    *indices* rather than thresholding (``scores >= thresh`` over-selects
+    whole tie groups at the cut). ``lax.top_k`` orders equal scores by
+    ascending index, so ties break deterministically and the mask always
+    has exactly m ones."""
     C = scores.shape[0]
-    thresh = jax.lax.top_k(scores, m)[0][-1]
-    mask = scores >= thresh
-    # break ties deterministically so exactly the top-m survive on average
-    return mask.astype(jnp.float32)
+    idx = jax.lax.top_k(scores, m)[1]
+    return jnp.zeros((C,), jnp.float32).at[idx].set(1.0)
 
 
 def select(cfg: FLConfig, rng, *, losses, resources, sizes):

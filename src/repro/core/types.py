@@ -219,6 +219,19 @@ class FLConfig:
     # round metrics and NaN-fill the eval-only leaves (engine.RoundRunner)
     eval_every: int = 1
 
+    # §III.B asynchronous / semi-asynchronous updating (AsyncEngine,
+    # DESIGN.md §7): the server consumes client completions in virtual-time
+    # order and aggregates a FedBuff-style buffer of ``async_buffer_size``
+    # updates (1 = FedAsync immediate application; 0 = full participation,
+    # i.e. buffer_size == n_clients) with FedAsync staleness decay
+    # ``(1 + tau)^(-staleness_alpha)``. ``latency_profile`` maps the FedMCCS
+    # device resource profiles onto per-dispatch virtual latencies
+    # (``data.pipeline.device_latency``): constant | resource | uniform |
+    # heavy_tail.
+    async_buffer_size: int = 0
+    staleness_alpha: float = 0.5
+    latency_profile: str = "constant"
+
     # server optimizer (beyond-paper: FedOpt family, Reddi et al. 2020)
     server_opt: str = "fedavg"        # fedavg | fedavgm | fedadam | fedyogi
     server_lr: float = 1.0
@@ -248,6 +261,11 @@ class FLState:
     round: jax.Array                  # int32 scalar
     prev_delta: PyTree | None = None  # CMFL relevance reference (last global
                                       # update); None unless cmfl enabled
+    async_state: PyTree | None = None # AsyncEngine virtual-clock state (dict:
+                                      # clock, next_done, version,
+                                      # server_version, updates, buf_w,
+                                      # losses, client and upload rng keys);
+                                      # None on synchronous topologies
 
 
 @jax.tree_util.register_dataclass
@@ -265,6 +283,11 @@ class CommLedger:
     downlink_wire: jax.Array
     uplink_dense: jax.Array           # what uncompressed f32 would have cost
     downlink_dense: jax.Array
+    virtual_time: Any = None          # AsyncEngine virtual wall-clock at this
+                                      # event (f32 seconds); None on
+                                      # synchronous topologies — lets
+                                      # bytes-to-target and time-to-target
+                                      # read off the same ledger stack
 
     @staticmethod
     def zero() -> "CommLedger":

@@ -12,8 +12,46 @@ import dataclasses
 from typing import Iterator
 
 import jax
+import jax.numpy as jnp
 
 from repro.data.synthetic import FedDataConfig, sample_round
+
+LATENCY_PROFILES = ("constant", "resource", "uniform", "heavy_tail")
+
+
+def device_latency(profile: str, resources, rng):
+    """Per-client virtual round latency from the FedMCCS device profile.
+
+    ``resources`` is the (C, 4) [cpu, memory, energy, link] array the data
+    pipeline already generates per client (synthetic.sample_round) — the same
+    signal FedMCCS selection gates on.  The AsyncEngine draws one latency per
+    *dispatch* (DESIGN.md §7), so the profile's randomness models per-round
+    jitter on top of the client's fixed capability:
+
+      * ``constant``   — 1.0 for everyone (the degenerate limit in which the
+                         AsyncEngine reproduces synchronous FedAvg);
+      * ``resource``   — compute + transfer time, deterministic per client:
+                         0.5/cpu + 0.5/link;
+      * ``uniform``    — resource base x U[0.5, 1.5) jitter;
+      * ``heavy_tail`` — resource base x Pareto(a=1.5) jitter (infinite
+                         variance: the straggler regime where async buys its
+                         time-to-target win).
+    """
+    C = resources.shape[0]
+    if profile == "constant":
+        return jnp.ones((C,), jnp.float32)
+    cpu = jnp.maximum(resources[:, 0], 0.05)
+    link = jnp.maximum(resources[:, 3], 0.05)
+    base = (0.5 / cpu + 0.5 / link).astype(jnp.float32)
+    if profile == "resource":
+        return base
+    if profile == "uniform":
+        return base * jax.random.uniform(rng, (C,), jnp.float32, 0.5, 1.5)
+    if profile == "heavy_tail":
+        u = jax.random.uniform(rng, (C,), jnp.float32, 1e-4, 1.0)
+        return base * u ** (-1.0 / 1.5)
+    raise ValueError(
+        f"unknown latency profile {profile!r}; have {LATENCY_PROFILES}")
 
 
 class FederatedLoader:

@@ -36,6 +36,19 @@ def _parse():
     ap.add_argument("--server-opt", default="fedavg")
     ap.add_argument("--hierarchical", action="store_true")
     ap.add_argument("--sync-every", type=int, default=4)
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="AsyncEngine: virtual-clock buffered async FL "
+                         "(DESIGN.md §7); --rounds then counts server "
+                         "events (client uploads), not synchronous rounds")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="async only: client slots (mesh-decoupled)")
+    ap.add_argument("--buffer-size", type=int, default=0,
+                    help="async FedBuff K (1 = FedAsync, 0 = n_clients "
+                         "= the synchronous limit)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="async staleness decay (1+tau)^(-alpha)")
+    ap.add_argument("--latency-profile", default="heavy_tail",
+                    choices=["constant", "resource", "uniform", "heavy_tail"])
     ap.add_argument("--seq", type=int, default=48)
     ap.add_argument("--batch-per-client", type=int, default=4)
     ap.add_argument("--devices", type=int, default=0,
@@ -75,7 +88,43 @@ def main():
                   selection=args.selection,
                   clients_per_round=args.clients_per_round,
                   server_opt=args.server_opt, hierarchical=args.hierarchical,
-                  sync_every=args.sync_every, eval_every=eval_every)
+                  sync_every=args.sync_every, eval_every=eval_every,
+                  async_buffer_size=args.buffer_size,
+                  staleness_alpha=args.staleness_alpha,
+                  latency_profile=args.latency_profile)
+
+    if args.async_mode:
+        # mesh-free virtual-clock path: --rounds counts server events
+        from repro.core.async_engine import make_async_step
+        from repro.core.engine import run_rounds
+        data = FedDataConfig(vocab_size=cfg.vocab_size,
+                             num_clients=args.clients, seq_len=args.seq,
+                             batch_per_client=args.batch_per_client,
+                             heterogeneity=1.5)
+
+        def data_fn(v):
+            return sample_round(data, jax.random.fold_in(
+                jax.random.PRNGKey(1), v))
+
+        a = make_async_step(model, fl, args.clients, data_fn, chunk=args.seq)
+        print(f"async arch={cfg.name} clients={args.clients} "
+              f"K={a.buffer_size} alpha={args.staleness_alpha} "
+              f"profile={args.latency_profile} "
+              f"params={model.param_count():,}")
+        state = a.init_fn(jax.random.PRNGKey(0))
+        state, ms = run_rounds(a.engine, state, data_fn, args.rounds,
+                               chunk=args.chunk)
+        for i in range(args.rounds):
+            led = jax.tree.map(lambda x, i=i: x[i], ms["ledger"])
+            print(f"event {i:>4} t={float(ms['clock'][i]):8.2f} "
+                  f"v={int(ms['server_version'][i]):>3} "
+                  f"tau={float(ms['staleness'][i]):>3.0f} "
+                  f"loss={float(ms['loss'][i]):.3f} "
+                  f"up={float(led.uplink_wire)/1e6:.2f}MB", flush=True)
+        if args.checkpoint:
+            checkpoint.save(args.checkpoint, state.params)
+            print("saved", args.checkpoint)
+        return
 
     n = jax.device_count()
     mp = min(args.model_parallel, n)

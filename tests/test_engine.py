@@ -8,8 +8,10 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import get_arch
-from repro.core.engine import (RoundRunner, Topology, make_round_engine,
-                               run_rounds, uplink_pipeline)
+from repro.core.engine import (RoundRunner, Topology, check_doubly_stochastic,
+                               erdos_renyi_graph, expander_graph,
+                               make_round_engine, mixing_matrix, run_rounds,
+                               uplink_pipeline)
 from repro.core.simulate import make_sim_step
 from repro.core.types import FLConfig
 from repro.data.synthetic import FedDataConfig, sample_round
@@ -164,8 +166,63 @@ def test_topology_factories():
     assert Topology.sim(7).n_clients == 7
     g = Topology.gossip([(2, 0.5)])
     assert g.graph == ((2, 0.5),)
+    a = Topology.async_(8, buffer_size=4, staleness_alpha=0.3,
+                        latency_profile="heavy_tail")
+    assert (a.kind, a.n_clients, a.buffer_size) == ("async", 8, 4)
     with pytest.raises(ValueError):
         make_round_engine(MODEL, FLConfig(), Topology(kind="mesh"), chunk=32)
+
+
+# ---------------------------------------------------------------------------
+# gossip graphs beyond rings: expander / Erdős–Rényi + doubly-stochastic check
+# ---------------------------------------------------------------------------
+
+def test_ring_mixing_matrix_is_classic():
+    """The default symmetric ring is W = I/2 + (L+R)/4."""
+    W = mixing_matrix(((1, 0.25), (-1, 0.25)), 4)
+    check_doubly_stochastic(W)
+    expect = np.eye(4) * 0.5 + 0.25 * (np.roll(np.eye(4), 1, 0)
+                                       + np.roll(np.eye(4), -1, 0))
+    np.testing.assert_allclose(W, expect)
+
+
+@pytest.mark.parametrize("n", [4, 8, 12])
+def test_expander_graph_doubly_stochastic_and_mixes_faster(n):
+    g = expander_graph(n, degree=4)
+    W = mixing_matrix(g, n)
+    check_doubly_stochastic(W)
+    ring = mixing_matrix(((1, 0.25), (-1, 0.25)), n)
+    lam2 = lambda M: np.sort(np.abs(np.linalg.eigvals(M)))[-2]
+    if n >= 8:    # same degree-2 graph at n=4
+        assert lam2(W) < lam2(ring) + 1e-9, (lam2(W), lam2(ring))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_erdos_renyi_graph_doubly_stochastic(seed):
+    n = 10
+    g = erdos_renyi_graph(n, p=0.5, seed=seed)
+    W = mixing_matrix(g, n)
+    check_doubly_stochastic(W)
+    # symmetric (matchings with a uniform Metropolis-style weight)
+    np.testing.assert_allclose(W, W.T)
+    # each entry is a full permutation tuple (ppermute-able matching)
+    for perm, w in g:
+        assert sorted(perm) == list(range(n))
+        assert all(perm[perm[i]] == i for i in range(n))   # involution
+
+
+def test_gossip_graph_doubly_stochastic_check_rejects():
+    # overweight incoming edges -> negative self-weight
+    with pytest.raises(ValueError, match="negative"):
+        check_doubly_stochastic(mixing_matrix(((1, 0.8), (-1, 0.8)), 8))
+    # a non-permutation entry fails loudly at edge construction
+    with pytest.raises(ValueError, match="permutation"):
+        mixing_matrix((((0, 0, 1, 2), 0.25),), 4)
+    # the engine builder runs the check on every graph (single-device mesh:
+    # C=1 collapses every ring to a self-loop, which is legitimately doubly
+    # stochastic, so exercise the C>1 path through mixing_matrix directly)
+    W = mixing_matrix(Topology.gossip_expander(8, 4).graph, 8)
+    check_doubly_stochastic(W)
 
 
 # ---------------------------------------------------------------------------

@@ -61,6 +61,31 @@ def test_checkpoint_roundtrip():
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_selection_top_m_mask_exact_on_ties():
+    """Regression (rank-based tie-break): ``scores >= thresh`` over-selected
+    whole tie groups at the cut — the mask must have exactly m ones, with
+    ties broken deterministically by ascending index."""
+    import jax.numpy as jnp
+    from repro.core import selection as sel
+    from repro.core.types import FLConfig
+
+    # all-equal scores: the old thresholding selected all C
+    m = sel._top_m_mask(jnp.ones((10,)), 3)
+    assert float(m.sum()) == 3.0
+    assert np.asarray(m)[:3].all()            # lowest indices win ties
+    # partial tie at the threshold
+    m = sel._top_m_mask(jnp.array([1.0, 2.0, 2.0, 2.0, 0.5]), 2)
+    np.testing.assert_array_equal(np.asarray(m), [0, 1, 1, 0, 0])
+    # end-to-end: random selection draws can tie only pathologically, but
+    # multi_criteria scores (resource means) tie easily — exactly m selected
+    fl = FLConfig(selection="multi_criteria", clients_per_round=2)
+    w = sel.select(fl, jax.random.PRNGKey(0),
+                   losses=jnp.zeros((6,)),
+                   resources=jnp.full((6, 4), 0.5),
+                   sizes=jnp.ones((6,)))
+    assert float((w > 0).sum()) == 2.0
+
+
 def test_ledger_arithmetic():
     z = CommLedger.zero()
     l1 = CommLedger(*(jnp.float32(x) for x in (10, 8, 4, 100, 100)))
