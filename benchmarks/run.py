@@ -311,8 +311,10 @@ def bench_async(rounds):
     heavy-tailed device-latency profile a synchronous round costs the MAX of
     the per-client latency draws, while the AsyncEngine's buffered server
     progresses on the fast clients.  Emits loss-vs-virtual-time and
-    loss-vs-bytes for sync FedAvg vs FedBuff(K) vs FedAsync(K=1) on the
-    identical workload, plus the time-to-target claim row."""
+    loss-vs-bytes for sync FedAvg vs FedBuff(K) vs FedAsync(K=1) vs
+    deadline-flush FedBuff (adaptive buffer sizing, DESIGN.md §8) on the
+    identical workload, plus the time-to-target claim rows (promoted to
+    EXPERIMENTS.md §Async)."""
     from repro.core.async_engine import make_async_step
     from repro.data.pipeline import device_latency
 
@@ -346,12 +348,21 @@ def bench_async(rounds):
          mb=round(bytes_cum[-1] / 1e6, 2), vclock=round(sync_t[-1], 1))
 
     # --- async runs: same upload budget (rounds*C events) ------------------
+    # deadline-flush (adaptive buffer sizing, DESIGN.md §8): K = C never
+    # fills before the stragglers land, so flush cadence is purely
+    # time-driven — the deadline is the median fault-free device latency
+    # (the server waits one "typical" client, never a Pareto tail draw)
+    dl = float(np.median(np.asarray(
+        device_latency("resource", resources, jax.random.PRNGKey(0)))))
     n_events = rounds * clients
-    for name, K in [("fedbuff_k4", 4), ("fedbuff_k2", 2), ("fedasync_k1", 1)]:
+    for name, K, deadline in [("fedbuff_k4", 4, None),
+                              ("fedbuff_k2", 2, None),
+                              ("fedasync_k1", 1, None),
+                              ("fedbuff_deadline", clients, dl)]:
         fl = FLConfig(**base)
         a = make_async_step(model, fl, clients, data_fn, buffer_size=K,
                             staleness_alpha=0.5, latency_profile=profile,
-                            chunk=48)
+                            flush_deadline=deadline, chunk=48)
         state = a.init_fn(jax.random.PRNGKey(0))
         t0 = time.perf_counter()
         state, ms = run_rounds(a.engine, state, data_fn, n_events, chunk=16,
@@ -371,7 +382,12 @@ def bench_async(rounds):
              versions=int(np.asarray(ms["server_version"])[-1]))
 
     # --- time-to-target + bytes-to-target on the shared loss target --------
-    target = max(l[-1] for l, _, _ in runs.values()) + 0.02
+    # the target is pinned to the pre-existing claim runs (sync + the
+    # count-flush family): adding new variants to the sweep must not
+    # re-base the loss bar the established sync-vs-FedBuff claim is
+    # measured against (new variants are judged on the same bar)
+    claim_runs = ("sync_fedavg", "fedbuff_k4", "fedbuff_k2", "fedasync_k1")
+    target = max(runs[n][0][-1] for n in claim_runs) + 0.02
     tt = {}
     for name, (l, b, vt) in runs.items():
         idx = next((i for i, x in enumerate(l) if x <= target), None)
@@ -385,6 +401,16 @@ def bench_async(rounds):
          holds=bool(best_buff < tt["sync_fedavg"][0]),
          fedbuff_vclock=round(best_buff, 1),
          sync_vclock=round(tt["sync_fedavg"][0], 1),
+         note="heavy-tail-stragglers-paper_lm")
+    # adaptive buffer sizing: deadline-flush vs the best count-flush K —
+    # under heavy tails the deadline caps how long the buffer waits on a
+    # Pareto draw, so its time-to-target should at least match K-flush
+    emit("async/claim_deadline_flush_vs_k_flush", 0.0,
+         holds=bool(np.isfinite(tt["fedbuff_deadline"][0])
+                    and tt["fedbuff_deadline"][0] <= 1.25 * best_buff),
+         deadline_vclock=round(tt["fedbuff_deadline"][0], 1),
+         k_flush_vclock=round(best_buff, 1),
+         deadline=round(dl, 2),
          note="heavy-tail-stragglers-paper_lm")
 
 

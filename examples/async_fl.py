@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/async_fl.py \
         [--buffer-size 4] [--alpha 0.5] [--profile heavy_tail] \
-        [--generations 10] [--clients 8]
+        [--flush-deadline 0] [--generations 10] [--clients 8]
 
 Runs the AsyncEngine (DESIGN.md §7) on the paper-faithful small LM: each
 client slot draws a per-dispatch latency from its simulated device profile,
@@ -32,6 +32,10 @@ def main():
     ap.add_argument("--buffer-size", type=int, default=4,
                     help="FedBuff K (1 = FedAsync, 0 = clients = sync limit)")
     ap.add_argument("--alpha", type=float, default=0.5)
+    ap.add_argument("--flush-deadline", type=float, default=0.0,
+                    help="also flush when the virtual clock passes the last "
+                         "flush + deadline (adaptive buffer sizing, "
+                         "DESIGN.md §8; 0 = count-only FedBuff)")
     ap.add_argument("--profile", default="heavy_tail",
                     choices=["constant", "resource", "uniform", "heavy_tail"])
     ap.add_argument("--generations", type=int, default=10)
@@ -51,10 +55,12 @@ def main():
     a = make_async_step(model, fl, args.clients, data_fn,
                         buffer_size=args.buffer_size,
                         staleness_alpha=args.alpha,
-                        latency_profile=args.profile, chunk=48)
+                        latency_profile=args.profile,
+                        flush_deadline=args.flush_deadline, chunk=48)
     n_events = args.generations * args.clients
     print(f"params={model.param_count():,} K={a.buffer_size} "
-          f"alpha={args.alpha} profile={args.profile} events={n_events}")
+          f"alpha={args.alpha} profile={args.profile} "
+          f"deadline={args.flush_deadline or 'off'} events={n_events}")
 
     state = a.init_fn(jax.random.PRNGKey(0))
     state, ms = run_rounds(a.engine, state, data_fn, n_events, chunk=8)

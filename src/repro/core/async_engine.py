@@ -1,4 +1,4 @@
-"""AsyncEngine — virtual-clock asynchronous FL (DESIGN.md §7).
+"""AsyncEngine — virtual-clock asynchronous FL (DESIGN.md §7–§8).
 
 The survey names asynchronous / semi-asynchronous updating as the third
 communication-efficiency lever next to compression and selection: once the
@@ -7,7 +7,10 @@ module opens that workload as a new ``Topology.async_`` binding of the
 RoundEngine: a **virtual-clock event simulator** in which every client slot
 draws a per-dispatch latency from its simulated device profile
 (``data.pipeline.device_latency`` over the FedMCCS resource vectors) and the
-server consumes completions in virtual-time order.
+server consumes completions in virtual-time order.  Measured result: FedBuff
+reaches the paper_lm target loss in ~2.4x less virtual wall-clock than sync
+FedAvg under heavy-tail stragglers at the same upload budget
+(EXPERIMENTS.md §Async, ``benchmarks.run --only async``).
 
 One ``run_rounds`` step == one **server event** (a client upload arriving):
 
@@ -15,28 +18,38 @@ One ``run_rounds`` step == one **server event** (a client upload arriving):
                priority queue; ties break to the lowest client index, so the
                degenerate constant-latency case pops in client order);
     arrive   — the completing client's *already-encoded* payload is
-               delivered: its staleness weight ``(1 + tau)^(-alpha)`` is
-               recorded (tau = server_version now minus server_version at
-               its dispatch) and its pending ``comm_state`` row (EF
-               residual / DGC momentum advanced when the payload was
-               produced) is committed;
-    flush    — when the FedBuff buffer holds ``buffer_size`` updates, the
-               server aggregates them staleness-weighted, applies the
-               server optimizer, bumps ``server_version``, and re-dispatches
-               exactly the buffered clients on the new model (contributors
-               receive the model their own updates produced — FedBuff's
-               server-side downlink ordering);
+               delivered: its staleness ``tau`` (server_version now minus
+               server_version at its dispatch) and FedAsync weight
+               ``(1 + tau)^(-alpha)`` are recorded, and its pending
+               ``comm_state`` row (EF residual / DGC momentum advanced when
+               the payload was produced) is committed;
+    flush    — when the FedBuff buffer holds ``buffer_size`` updates OR the
+               virtual clock passes the flush deadline
+               (``async_flush_deadline`` > 0 — adaptive buffer sizing,
+               DESIGN.md §8), the server aggregates the buffer
+               staleness-weighted, applies the server optimizer with the
+               buffer's **mean staleness** (staleness-scaled FedAdam/FedYogi
+               moments, ``core.server_opt``), bumps ``server_version``, and
+               re-dispatches exactly the buffered clients on the new model
+               (contributors receive the model their own updates produced —
+               FedBuff's server-side downlink ordering);
     ledger   — per-event CommLedger rows carry ``virtual_time`` so
                bytes-to-target and time-to-target read off one stack.
 
-**Dispatch is where the computation lives**: one batched local-update vmap
-plus one batched CommPipeline encode/decode vmap per flush — the *same*
-computation graph as a synchronous sim round.  A client's pipeline state is
-untouched between its dispatch and its upload (only its own uploads mutate
-its row), so encoding at dispatch is semantically identical to encoding at
-completion: real clients encode before transmitting, and the straggler
-delay is in *delivery*.  This also sidesteps an XLA trap: fusing the wire
-into per-completion events would split the delta -> error-feedback-add
+**Dispatch is the shared body** (DESIGN.md §8): downlink, the batched
+local-update vmap, the wire-boundary ``optimization_barrier``, and the
+batched CommPipeline encode/decode all come from
+``core.engine.make_dispatch`` — the *same* ``Dispatch`` object the
+synchronous sim wire is built on, not a mirror of it.  That makes the
+degenerate equivalence (buffer = C, constant latency == sync ``Topology.sim``
+bit-exactly, params AND comm_state, with fedavg and staleness-scaled fedadam
+server optimizers alike) **structural**: a change to the sync wire *is* a
+change to the async wire.  A client's pipeline state is untouched between
+its dispatch and its upload (only its own uploads mutate its row), so
+encoding at dispatch is semantically identical to encoding at completion —
+real clients encode before transmitting, and the straggler delay is in
+*delivery*.  Keeping the whole dispatch in one graph also sidesteps an XLA
+trap: per-completion wire hops would split the delta -> error-feedback-add
 across programs, and XLA's FMA contraction (which reaches across
 ``lax.optimization_barrier``) makes split-program arithmetic differ from
 fused-program arithmetic at ULP level (DESIGN.md §7).
@@ -46,14 +59,15 @@ tree masked by ``isinf(next_done)`` (a client uploads at most once per
 dispatch, so client-keyed slots never collide), and the flush runs under a
 ``lax.cond``.
 
-**Equivalence contract** (test-enforced, tests/test_async.py): with
-``latency_profile="constant"`` and ``buffer_size == n_clients`` the event
-stream degenerates to synchronous rounds — C pops in client order, one
-flush — and the AsyncEngine reproduces the synchronous ``Topology.sim``
-FedAvg trajectory **bit-exactly** (params AND comm_state): the rng split
+**Equivalence contract** (structural via the shared dispatch body AND
+re-proved in tests/test_async.py): with ``latency_profile="constant"`` and
+``buffer_size == n_clients`` the event stream degenerates to synchronous
+rounds — C pops in client order, one flush — and the AsyncEngine reproduces
+the synchronous ``Topology.sim`` trajectory **bit-exactly**: the rng split
 schedule, per-client update rngs, wire encode rngs, aggregation weight
-algebra, and server-opt call are the identical computation graph, and
-``(1 + 0)^(-alpha) == 1.0`` exactly in IEEE arithmetic.
+algebra, and server-opt call are the identical computation graph,
+``(1 + 0)^(-alpha) == 1.0`` exactly in IEEE arithmetic (the FedAsync weight
+AND the FedAdam moment scale), and a disabled deadline adds no ops.
 """
 from __future__ import annotations
 
@@ -72,9 +86,10 @@ _INF = jnp.float32(jnp.inf)
 
 
 def _async_knobs(fl: FLConfig, topo) -> tuple:
-    """Resolve (buffer_size K, staleness alpha, latency profile): explicit
-    Topology fields win, FLConfig fields are the CLI-facing fallback, and
-    K == 0 means full participation (K = C)."""
+    """Resolve (buffer_size K, staleness alpha, latency profile, flush
+    deadline): explicit Topology fields win, FLConfig fields are the
+    CLI-facing fallback, K == 0 means full participation (K = C), and
+    deadline == 0 means count-only flushing."""
     C = topo.n_clients
     K = topo.buffer_size or fl.async_buffer_size or C
     if not (1 <= K <= C):
@@ -86,7 +101,12 @@ def _async_knobs(fl: FLConfig, topo) -> tuple:
     if profile not in LATENCY_PROFILES:
         raise ValueError(f"unknown latency profile {profile!r}; "
                          f"have {LATENCY_PROFILES}")
-    return int(K), float(alpha), profile
+    deadline = (topo.flush_deadline if topo.flush_deadline is not None
+                else fl.async_flush_deadline)
+    if deadline < 0:
+        raise ValueError(f"async_flush_deadline must be >= 0 (0 disables "
+                         f"deadline flushing); got {deadline}")
+    return int(K), float(alpha), profile, float(deadline)
 
 
 def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
@@ -115,51 +135,13 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
                          "cmfl_threshold=0")
 
     C = topo.n_clients
-    K, alpha, profile = _async_knobs(fl, topo)
+    K, alpha, profile, deadline = _async_knobs(fl, topo)
     terms, up, down = eng.ledger_terms(model, fl)
     stateful = up.stateful
-
-    def _dispatch(params, batch, comm_state, k_loc, k_down, k_up):
-        """One dispatch generation: downlink + batched local update + the
-        batched CommPipeline wire (encode -> decode) — the synchronous
-        engine's round body verbatim (same ops, same rng indexing, same
-        ``optimization_barrier`` at the wire boundary), so the degenerate
-        case shares its computation graph bit-for-bit.  Returns the (C,)-led
-        f32 *decoded* update rows (what each client's payload will deliver),
-        the (C,) mean losses, and the advanced per-leaf pipeline states."""
-        if not down.is_identity:
-            params = jax.tree.map(
-                lambda p: down.roundtrip(k_down,
-                                         p.reshape(-1).astype(jnp.float32))
-                .reshape(p.shape).astype(p.dtype), params)
-        model_batch = {k: v for k, v in batch.items()
-                       if k not in ("sizes", "resources")}
-        rngs = jax.random.split(k_loc, C)
-        deltas, losses, _, _ = jax.vmap(
-            lambda b, r: eng._client_update(model, fl, params, b, r,
-                                            None, None, chunk))(
-            model_batch, rngs)
-        deltas = jax.lax.optimization_barrier(deltas)
-        rngs_up = jax.random.split(k_up, C)
-        dec_rows, st_rows = [], []
-        for li, leaf in enumerate(jax.tree.leaves(deltas)):
-            shape = leaf.shape[1:]
-            flat = leaf.reshape(C, -1).astype(jnp.float32)
-            rs = jax.vmap(lambda r: jax.random.fold_in(r, li))(rngs_up)
-            if stateful:
-                def one(x, r, st):
-                    payload, nst = up.encode(st, r, x)
-                    return up.decode(payload, x.shape[0]), nst
-                dec, nst = jax.vmap(one)(flat, rs, comm_state[li])
-                st_rows.append(nst)
-            else:
-                def one(x, r):
-                    payload, _ = up.encode(up.init(x.shape), r, x)
-                    return up.decode(payload, x.shape[0])
-                dec = jax.vmap(one)(flat, rs)
-            dec_rows.append(dec.reshape((C,) + shape))
-        dec_tree = jax.tree.unflatten(jax.tree.structure(deltas), dec_rows)
-        return dec_tree, losses, (tuple(st_rows) if stateful else None)
+    # THE tentpole contract: this is the synchronous engine's dispatch body
+    # (downlink >> local-update vmap >> wire-boundary barrier >> CommPipeline
+    # encode/decode >> row aggregation), not a copy of it — DESIGN.md §8
+    dispatch = eng.make_dispatch(model, fl, up, down, C, chunk)
 
     def init_fn(rng):
         params = model.init(rng)
@@ -171,8 +153,8 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
         # jit: eager arithmetic (e.g. the E=1 fast-path delta) differs from
         # the compiled scan's at ULP level via XLA FMA contraction, which
         # would break the degenerate bit-exactness contract
-        updates, losses, pending = jax.jit(_dispatch)(params, batch0, comm0,
-                                                      k_loc, k_down, k_up)
+        updates, losses, pending = jax.jit(dispatch)(params, batch0, comm0,
+                                                     k_loc, k_down, k_up)
         lat = device_latency(profile, batch0["resources"], k_sel)
         A = {
             "clock": jnp.zeros((), jnp.float32),
@@ -181,7 +163,10 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
             "server_version": jnp.zeros((), jnp.int32),
             "updates": updates,
             "buf_w": jnp.zeros((C,), jnp.float32),
+            "buf_tau": jnp.zeros((C,), jnp.float32),
             "losses": losses,
+            "next_deadline": jnp.float32(deadline if deadline > 0
+                                         else jnp.inf),
         }
         if stateful:
             A["pending_comm"] = pending
@@ -208,13 +193,18 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
 
     def hop_arrive(ctx):
         """Delivery bookkeeping for ONE client: mark its slot in-buffer,
-        record its staleness weight, and commit its pending comm_state row
-        (the EF residual advanced when the payload was produced — only this
-        client's own uploads touch its row, so commit order is safe)."""
+        record its staleness (weight for the aggregation, raw tau for the
+        server optimizer's mean-staleness scale), and commit its pending
+        comm_state row (the EF residual advanced when the payload was
+        produced — only this client's own uploads touch its row, so commit
+        order is safe)."""
         st, A = ctx["state"], ctx["state"].async_state
         A2 = dict(A)
         A2["next_done"] = jnp.where(ctx["onehot"], _INF, A["next_done"])
         A2["buf_w"] = jnp.where(ctx["onehot"], ctx["stale_w"], A["buf_w"])
+        A2["buf_tau"] = jnp.where(ctx["onehot"],
+                                  ctx["tau"].astype(jnp.float32),
+                                  A["buf_tau"])
         A2["clock"] = ctx["clock"]
         if stateful:
             sel = ctx["onehot"]
@@ -231,7 +221,14 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
         return ctx
 
     def hop_flush(ctx):
-        """FedBuff aggregation + next-generation dispatch under lax.cond."""
+        """FedBuff aggregation + next-generation dispatch under lax.cond.
+
+        Fires on buffer count (fill >= K) OR — adaptive buffer sizing,
+        ``async_flush_deadline`` > 0 — when the completing event's virtual
+        clock (the popped entry of the completion-time vector) has passed
+        the last flush time + deadline; the buffer is never empty here
+        (this event's arrival is in it), so a deadline flush aggregates
+        whatever the stragglers left behind."""
         st, A = ctx["state"], ctx["A"]
         comm = ctx["new_comm"]        # committed rows, incl. this arrival's
 
@@ -251,20 +248,21 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
             sizes = nbatch.get("sizes", jnp.ones((C,), jnp.float32))
             w = sizes * mask
             wsum = jnp.maximum(w.sum(), 1e-9)
-            w_eff = A["buf_w"] * w
-            # materialize the buffered rows so the weighted mean lowers
-            # exactly like the sync wire's (whose decoded rows also pass
-            # through a barrier before aggregation)
-            buf = jax.lax.optimization_barrier(A["updates"])
-            agg = jax.tree.map(
-                lambda leaf: ((w_eff[:, None] * leaf.reshape(C, -1))
-                              .sum(0) / wsum).reshape(leaf.shape[1:]),
-                buf)
+            # the shared aggregation body: barrier + weighted mean, exactly
+            # the sync wire's lowering (Dispatch.aggregate_rows)
+            agg = dispatch.aggregate_rows(A["updates"], A["buf_w"] * w, wsum)
+            # mean staleness of the flushed buffer -> staleness-scaled
+            # server-optimizer moments (server_opt.apply, DESIGN.md §8);
+            # 0 in the degenerate limit, where the scale is exactly 1
+            tau_mean = ((mask * A["buf_tau"]).sum()
+                        / jnp.maximum(mask.sum(), 1.0))
             new_params, new_sos = server_opt.apply(fl, st.params, agg,
-                                                   st.server_opt_state)
+                                                   st.server_opt_state,
+                                                   staleness=tau_mean,
+                                                   staleness_alpha=alpha)
             loss = (w * A["losses"]).sum() / wsum
-            dec_rows, losses, pending = _dispatch(new_params, nbatch, comm,
-                                                  k_loc, k_down, k_up)
+            dec_rows, losses, pending = dispatch(new_params, nbatch, comm,
+                                                 k_loc, k_down, k_up)
             lat = device_latency(profile, nbatch["resources"], k_sel)
             mb = mask > 0
             A3 = dict(
@@ -273,8 +271,11 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
                 next_done=jnp.where(mb, ctx["clock"] + lat, A["next_done"]),
                 version=jnp.where(mb, new_ver, A["version"]),
                 buf_w=jnp.where(mb, 0.0, A["buf_w"]),
+                buf_tau=jnp.where(mb, 0.0, A["buf_tau"]),
                 losses=jnp.where(mb, losses, A["losses"]),
                 server_version=new_ver,
+                next_deadline=(ctx["clock"] + jnp.float32(deadline)
+                               if deadline > 0 else A["next_deadline"]),
             )
             if stateful:
                 A3["pending_comm"] = tuple(
@@ -288,8 +289,11 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
             return (st.params, st.server_opt_state, A, st.rng,
                     A["losses"].mean(), jnp.float32(0.0), jnp.float32(0.0))
 
+        fire = ctx["fill"] >= K
+        if deadline > 0:
+            fire = fire | (ctx["clock"] >= A["next_deadline"])
         (params, sos, A3, rng, loss, n_down, flushed) = jax.lax.cond(
-            ctx["fill"] >= K, flush, wait, None)
+            fire, flush, wait, None)
         ctx.update(new_params=params, new_sos=sos, A=A3, new_rng=rng,
                    loss=loss, n_down=n_down, flushed=flushed)
         return ctx
@@ -336,7 +340,8 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
         topology=topo, program=program, round_fn=program,
         init_fn=init_fn, n_clients=C, terms=terms,
         aux={"buffer_size": K, "staleness_alpha": alpha,
-             "latency_profile": profile, "events_per_generation": K},
+             "latency_profile": profile, "flush_deadline": deadline,
+             "events_per_generation": K},
     )
 
 
@@ -356,7 +361,8 @@ class AsyncFL:
 
 def make_async_step(model: Model, fl: FLConfig, n_clients: int, data_fn,
                     buffer_size: int = 0, staleness_alpha: float = None,
-                    latency_profile: str = None, chunk: int = 64) -> AsyncFL:
+                    latency_profile: str = None, flush_deadline: float = None,
+                    chunk: int = 64) -> AsyncFL:
     """Build the async event step.  ``run_rounds(a.engine, state, data_fn,
     n_events)`` then drives ``n_events`` server events through the scan
     driver (the per-step batch the runner samples is unused by the async
@@ -367,7 +373,8 @@ def make_async_step(model: Model, fl: FLConfig, n_clients: int, data_fn,
     # _async_knobs at build time
     topo = Topology.async_(n_clients, buffer_size=buffer_size,
                            staleness_alpha=staleness_alpha,
-                           latency_profile=latency_profile or "")
+                           latency_profile=latency_profile or "",
+                           flush_deadline=flush_deadline)
     engine = make_round_engine(model, fl, topo, chunk=chunk, data_fn=data_fn)
     return AsyncFL(init_fn=engine.init_fn, step_fn=jax.jit(engine.round_fn),
                    n_clients=engine.n_clients,

@@ -81,6 +81,9 @@ class Topology:
     staleness_alpha: float = None      # async only: (1+tau)^(-alpha) decay
                                        # (None = from FLConfig)
     latency_profile: str = ""          # async only ("" = from FLConfig)
+    flush_deadline: float = None       # async only: virtual-clock flush
+                                       # deadline (None = from FLConfig;
+                                       # 0 = count-only FedBuff)
 
     @staticmethod
     def star(client_axis: str = "") -> "Topology":
@@ -110,19 +113,23 @@ class Topology:
     @staticmethod
     def async_(n_clients: int, buffer_size: int = 0,
                staleness_alpha: float = None,
-               latency_profile: str = "") -> "Topology":
+               latency_profile: str = "",
+               flush_deadline: float = None) -> "Topology":
         """Virtual-clock asynchronous FL (core.async_engine, DESIGN.md §7):
         FedBuff buffering (``buffer_size`` K; 1 = FedAsync, 0/C = the
         degenerate synchronous limit), FedAsync staleness decay
         ``(1+tau)^(-staleness_alpha)``, per-dispatch latencies drawn from
-        ``latency_profile`` over the FedMCCS device resource vectors.
+        ``latency_profile`` over the FedMCCS device resource vectors, and
+        adaptive buffer sizing via ``flush_deadline`` (> 0: also flush when
+        the virtual clock passes the last flush + deadline, DESIGN.md §8).
         Knobs left at their sentinel (0 / None / \"\") fall back to the
-        ``FLConfig.async_buffer_size / staleness_alpha / latency_profile``
-        fields at engine build time."""
+        ``FLConfig.async_buffer_size / staleness_alpha / latency_profile /
+        async_flush_deadline`` fields at engine build time."""
         return Topology(kind="async", n_clients=n_clients,
                         buffer_size=buffer_size,
                         staleness_alpha=staleness_alpha,
-                        latency_profile=latency_profile)
+                        latency_profile=latency_profile,
+                        flush_deadline=flush_deadline)
 
 
 # ---------------------------------------------------------------------------
@@ -401,6 +408,121 @@ def _client_update(model: Model, fl: FLConfig, params, batch_c, rng,
 
 
 # ---------------------------------------------------------------------------
+# The shared dispatch body (DESIGN.md §8) — downlink >> local-update vmap >>
+# wire-boundary optimization_barrier >> CommPipeline encode/decode.  Both the
+# synchronous sim/star hops and the AsyncEngine's generation dispatch run
+# THESE functions, so the degenerate async == sync bit-exactness contract is
+# structural: a change to the sync wire is, by construction, a change to the
+# async wire (there is no second copy to diverge).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)          # identity hash: jit-able callable
+class Dispatch:
+    """One dispatch generation, decomposed so programs can interleave their
+    topology-specific hops (selection, CMFL, SCAFFOLD control) between the
+    shared stages:
+
+      * ``downlink(params, k_down)`` — LFL-quantised global broadcast;
+      * ``local_update(params, model_batch, k_loc)`` — the batched client
+        vmap -> ``(deltas, mean_losses, first_losses)``;
+      * ``wire_rows(deltas, comm_state, k_up)`` — the wire boundary: one
+        ``optimization_barrier`` materializing the deltas, then the batched
+        CommPipeline encode/decode -> ``((C,)-led decoded rows, new
+        comm_state)``;
+      * ``aggregate_rows(rows, w_num, wsum)`` — barrier + weighted mean of
+        decoded rows (the sync wire aggregates rows it just decoded, the
+        async flush aggregates rows buffered from earlier events — the
+        barrier pins both to the same materialization, DESIGN.md §7/§8).
+
+    ``__call__`` composes the first three — the AsyncEngine's whole
+    per-generation computation."""
+
+    downlink: Callable
+    local_update: Callable
+    wire_rows: Callable
+    aggregate_rows: Callable
+    n_clients: int
+
+    @staticmethod
+    def model_batch(batch) -> dict:
+        """Model inputs only (FL metadata keys stay out of the loss vmap)."""
+        return {k: v for k, v in batch.items()
+                if k not in ("sizes", "resources")}
+
+    def __call__(self, params, batch, comm_state, k_loc, k_down, k_up):
+        params = self.downlink(params, k_down)
+        deltas, losses, _ = self.local_update(params,
+                                              self.model_batch(batch), k_loc)
+        rows, new_comm = self.wire_rows(deltas, comm_state, k_up)
+        return rows, losses, new_comm
+
+
+def make_dispatch(model: Model, fl: FLConfig, up, down, C: int,
+                  chunk: int) -> Dispatch:
+    """Build the shared dispatch body for one (model, fl) binding over ``C``
+    vmapped clients with uplink pipeline ``up`` / downlink ``down``."""
+    stateful = up.stateful
+
+    def downlink(params, k_down):
+        if down.is_identity:
+            return params
+        return jax.tree.map(
+            lambda p: down.roundtrip(k_down,
+                                     p.reshape(-1).astype(jnp.float32))
+            .reshape(p.shape).astype(p.dtype), params)
+
+    def local_update(params, model_batch, k_loc):
+        rngs = jax.random.split(k_loc, C)
+        deltas, losses, first_losses, _ = jax.vmap(
+            lambda b, r: _client_update(model, fl, params, b, r,
+                                        None, None, chunk))(model_batch, rngs)
+        return deltas, losses, first_losses
+
+    def wire_rows(deltas, comm_state, k_up):
+        # The wire boundary: materialize the client deltas BEFORE encoding —
+        # without the barrier XLA fuses e.g. the E=1 delta multiply into the
+        # error-feedback residual add as an FMA, and a consumer that receives
+        # the delta materialized in an earlier program (the AsyncEngine's
+        # buffered rows) could never reproduce the arithmetic (DESIGN.md §7)
+        deltas = jax.lax.optimization_barrier(deltas)
+        rngs_up = jax.random.split(k_up, C)
+        dec_rows, st_rows = [], []
+        for li, leaf in enumerate(jax.tree.leaves(deltas)):
+            shape = leaf.shape[1:]
+            flat = leaf.reshape(C, -1).astype(jnp.float32)
+            rs = jax.vmap(lambda r: jax.random.fold_in(r, li))(rngs_up)
+            if stateful:
+                def one(x, r, st):
+                    payload, nst = up.encode(st, r, x)
+                    return up.decode(payload, x.shape[0]), nst
+                dec, nst = jax.vmap(one)(flat, rs, comm_state[li])
+                st_rows.append(nst)
+            else:
+                def one(x, r):
+                    payload, _ = up.encode(up.init(x.shape), r, x)
+                    return up.decode(payload, x.shape[0])
+                dec = jax.vmap(one)(flat, rs)
+            dec_rows.append(dec.reshape((C,) + shape))
+        dec_tree = jax.tree.unflatten(jax.tree.structure(deltas), dec_rows)
+        return dec_tree, (tuple(st_rows) if stateful else None)
+
+    def aggregate_rows(rows, w_num, wsum):
+        # materialize the decoded rows before aggregating — the sync wire
+        # feeds rows straight out of wire_rows, the AsyncEngine feeds rows
+        # committed by earlier events; the barrier makes the weighted mean
+        # lower identically in both programs (bit-exact degenerate
+        # equivalence, DESIGN.md §7)
+        rows = jax.lax.optimization_barrier(rows)
+        return jax.tree.map(
+            lambda leaf: ((w_num[:, None] * leaf.reshape(C, -1)).sum(0)
+                          / wsum).reshape(leaf.shape[1:]), rows)
+
+    return Dispatch(downlink=downlink, local_update=local_update,
+                    wire_rows=wire_rows, aggregate_rows=aggregate_rows,
+                    n_clients=C)
+
+
+# ---------------------------------------------------------------------------
 # Wire implementations (encode -> transport -> decode -> aggregate), one per
 # topology.  Every one threads the pipeline comm_state.
 # ---------------------------------------------------------------------------
@@ -424,41 +546,18 @@ def _star_wire(mesh, pspecs, up, client_axis, abs_params, need_dense) -> _Wire:
     return _Wire(aggregate=aggregate, aggregate_dense=agg_dense)
 
 
-def _sim_wire(up, C) -> _Wire:
-    """Single-device wire: per-leaf vmapped encode/decode over the client
-    dim, weighted mean aggregate. Pipeline state (EF residual / DGC momentum)
-    rides along with a leading C dim."""
-    stateful = up.stateful
+def _sim_wire(dispatch: Dispatch, C) -> _Wire:
+    """Single-device wire, built ON the shared dispatch body: encode/decode
+    rows via ``dispatch.wire_rows`` and the weighted mean via
+    ``dispatch.aggregate_rows`` — the same two functions the AsyncEngine
+    runs, so sync and async cannot silently diverge (DESIGN.md §8).
+    Pipeline state (EF residual / DGC momentum) rides along with a leading
+    C dim."""
 
     def aggregate(deltas, weights, rng, comm_state):
+        rows, new_comm = dispatch.wire_rows(deltas, comm_state, rng)
         wsum = jnp.maximum(weights.sum(), 1e-9)
-        rngs = jax.random.split(rng, C)
-        d_leaves, dtree = jax.tree.flatten(deltas)
-        agg_leaves, st_leaves = [], []
-        for li, leaf in enumerate(d_leaves):
-            shape = leaf.shape[1:]
-            flat = leaf.reshape(C, -1).astype(jnp.float32)
-            rs = jax.vmap(lambda r: jax.random.fold_in(r, li))(rngs)
-            if stateful:
-                def one(x, r, st):
-                    payload, nst = up.encode(st, r, x)
-                    return up.decode(payload, x.shape[0]), nst
-                dec, nst = jax.vmap(one)(flat, rs, comm_state[li])
-                st_leaves.append(nst)
-            else:
-                def one(x, r):
-                    payload, _ = up.encode(up.init(x.shape), r, x)
-                    return up.decode(payload, x.shape[0])
-                dec = jax.vmap(one)(flat, rs)
-            # materialize the decoded payloads before aggregating — the
-            # AsyncEngine's buffered rows arrive materialized from earlier
-            # events, so the shared weighted-mean must not fuse with the
-            # decode here (bit-exact degenerate equivalence, DESIGN.md §7)
-            dec = jax.lax.optimization_barrier(dec)
-            agg_leaves.append(((weights[:, None] * dec).sum(0) / wsum)
-                              .reshape(shape))
-        agg = jax.tree.unflatten(dtree, agg_leaves)
-        return agg, (tuple(st_leaves) if stateful else None)
+        return dispatch.aggregate_rows(rows, weights, wsum), new_comm
 
     def aggregate_dense(tree, weights, rng):
         wsum = jnp.maximum(weights.sum(), 1e-9)
@@ -474,8 +573,8 @@ def _sim_wire(up, C) -> _Wire:
 # ---------------------------------------------------------------------------
 
 def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
-                          wire: _Wire, terms: dict, down, C: int,
-                          chunk: int) -> RoundProgram:
+                          wire: _Wire, terms: dict, dispatch: Dispatch,
+                          C: int, chunk: int) -> RoundProgram:
     scaffold = fl.algorithm == "scaffold"
     simulator = topo.kind == "sim"
 
@@ -487,14 +586,9 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
         return ctx
 
     def hop_downlink(ctx):
-        # downlink (LFL): clients train from a quantised global model
-        params = ctx["state"].params
-        if not down.is_identity:
-            params = jax.tree.map(
-                lambda p: down.roundtrip(ctx["r_down"],
-                                         p.reshape(-1).astype(jnp.float32))
-                .reshape(p.shape).astype(p.dtype), params)
-        ctx["params"] = params
+        # downlink (LFL): clients train from a quantised global model —
+        # the shared dispatch body's downlink stage (DESIGN.md §8)
+        ctx["params"] = dispatch.downlink(ctx["state"].params, ctx["r_down"])
         return ctx
 
     def hop_dane_gradient(ctx):
@@ -511,25 +605,32 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
         return ctx
 
     def hop_model_batch(ctx):
-        ctx["model_batch"] = {k: v for k, v in ctx["batch"].items()
-                              if k not in ("sizes", "resources")}
+        ctx["model_batch"] = Dispatch.model_batch(ctx["batch"])
         return ctx
 
     def hop_local_update(ctx):
         st, params = ctx["state"], ctx["params"]
-        ctrl = st.control if scaffold else None
-        rngs = jax.random.split(ctx["rng"], C)
         if scaffold:
+            rngs = jax.random.split(ctx["rng"], C)
             deltas, losses, first_losses, new_ci = jax.vmap(
                 lambda b, r, ci: _client_update(model, fl, params, b, r,
-                                                ctrl, ci, chunk))(
+                                                st.control, ci, chunk))(
                 ctx["model_batch"], rngs, st.client_controls)
-        else:
+        elif ctx["global_grad"] is not None:
+            # FedDANE's corrected solve carries the extra aggregated
+            # gradient — the one per-client signature the shared body
+            # doesn't take (async rejects feddane for the same reason)
+            rngs = jax.random.split(ctx["rng"], C)
             deltas, losses, first_losses, _ = jax.vmap(
                 lambda b, r: _client_update(model, fl, params, b, r,
                                             None, None, chunk,
                                             global_grad=ctx["global_grad"]))(
                 ctx["model_batch"], rngs)
+            new_ci = None
+        else:
+            # the shared dispatch body's local-update stage (DESIGN.md §8)
+            deltas, losses, first_losses = dispatch.local_update(
+                params, ctx["model_batch"], ctx["rng"])
             new_ci = None
         ctx.update(deltas=deltas, losses=losses, first_losses=first_losses,
                    new_ci=new_ci)
@@ -560,12 +661,12 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
 
     def hop_wire(ctx):
         # encode -> transport -> decode -> aggregate; comm_state rides along.
-        # The barrier materializes the client deltas at the wire boundary —
-        # without it XLA fuses e.g. the E=1 delta multiply into the error-
-        # feedback residual add as an FMA, and the AsyncEngine (which hands
-        # the transport a delta materialized in an earlier event) could
-        # never reproduce the sync trajectory bit-exactly (DESIGN.md §7)
-        deltas = jax.lax.optimization_barrier(ctx["deltas"])
+        # The wire-boundary optimization_barrier lives in the shared dispatch
+        # body (Dispatch.wire_rows — the sim wire is built on it); the star
+        # wire's shard_map aggregator encodes inside the collective, so it
+        # materializes the deltas here instead (same boundary, DESIGN.md §8)
+        deltas = (ctx["deltas"] if simulator
+                  else jax.lax.optimization_barrier(ctx["deltas"]))
         weights = ctx["weights"]
         n_sel = (weights > 0).sum().astype(jnp.float32)
         agg, new_comm = wire.aggregate(deltas, weights, ctx["r_up"],
@@ -650,6 +751,7 @@ def _build_star(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
     terms, up, down = ledger_terms(model, fl)
     scaffold = fl.algorithm == "scaffold"
     stateful = up.stateful
+    dispatch = make_dispatch(model, fl, up, down, C, chunk)
     wire = _star_wire(mesh, pspecs, up, client_axis, abs_params,
                       need_dense=scaffold)
 
@@ -703,8 +805,8 @@ def _build_star(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
                 out[k] = NamedSharding(mesh, P(*lead, *sub))
         return out
 
-    program = _build_server_program(model, fl, topo, wire, terms, down, C,
-                                    chunk)
+    program = _build_server_program(model, fl, topo, wire, terms, dispatch,
+                                    C, chunk)
     return RoundEngine(
         topology=topo, program=program, round_fn=program,
         init_fn=init_fn, n_clients=C, terms=terms,
@@ -719,7 +821,8 @@ def _build_sim(model: Model, fl: FLConfig, topo: Topology,
     terms, up, down = ledger_terms(model, fl)
     scaffold = fl.algorithm == "scaffold"
     stateful = up.stateful
-    wire = _sim_wire(up, C)
+    dispatch = make_dispatch(model, fl, up, down, C, chunk)
+    wire = _sim_wire(dispatch, C)
 
     def init_fn(rng):
         params = model.init(rng)
@@ -738,8 +841,8 @@ def _build_sim(model: Model, fl: FLConfig, topo: Topology,
             prev_delta=zf() if fl.cmfl_threshold > 0 else None,
         )
 
-    program = _build_server_program(model, fl, topo, wire, terms, down, C,
-                                    chunk)
+    program = _build_server_program(model, fl, topo, wire, terms, dispatch,
+                                    C, chunk)
     return RoundEngine(topology=topo, program=program, round_fn=program,
                        init_fn=init_fn, n_clients=C, terms=terms)
 

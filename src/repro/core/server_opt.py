@@ -4,10 +4,33 @@
 (FedAvgM / FedAdam / FedYogi — Reddi et al., "Adaptive Federated
 Optimization", 2020) is included as a beyond-paper extension: it often buys
 the same accuracy in fewer rounds, which *is* a communication saving — the
-survey's objective by other means.
+survey's objective by other means (EXPERIMENTS.md §Async carries the
+measured time-to-target rows these optimizers feed into).
 
 All functions treat ``delta`` = weighted-mean client improvement
 (p_local_final − p_global), i.e. a pseudo-gradient of −delta.
+
+**Staleness awareness** (DESIGN.md §8): on the asynchronous topology the
+aggregated delta is built from a FedBuff buffer whose contributions are
+``tau`` server versions old on average.  A stale pseudo-gradient is a noisy
+estimate of the *current* loss surface, so feeding it into the adaptive
+moments at full strength lets a single ancient flush steer ``m``/``v`` for
+many rounds.  :func:`apply` therefore scales the **moment innovations** by
+
+    s = (1 + tau)^(-staleness_alpha)          (same decay as FedAsync)
+
+    m <- b1 * m + (1 - b1) * s * delta
+    v <- b2 * v + (1 - b2) * s * delta^2            (FedAdam)
+    v <- v - (1 - b2) * s * delta^2 * sign(v - delta^2)   (FedYogi)
+    m <- b1 * m + s * delta                          (FedAvgM)
+
+while the parameter update keeps its usual form.  Synchronous engines pass
+``staleness=None`` (tau = 0, s = 1 — the classical FedOpt update, byte- and
+graph-identical to the pre-staleness implementation); the AsyncEngine
+passes the flushed buffer's mean staleness (``core.async_engine``, flush
+hop).  ``(1 + 0)^(-alpha) == 1.0`` exactly in IEEE arithmetic, which is
+what keeps the degenerate async == sync contract bit-exact with FedAdam as
+the server optimizer (tests/test_async.py).
 """
 from __future__ import annotations
 
@@ -33,7 +56,29 @@ def init_state(name: str, params):
     raise ValueError(name)
 
 
-def apply(cfg: FLConfig, params, delta, state):
+def staleness_scale(cfg: FLConfig, staleness, alpha=None) -> jax.Array:
+    """The moment-innovation scale s = (1 + tau)^(-alpha).  ``alpha``
+    defaults to ``cfg.staleness_alpha``; the AsyncEngine passes its
+    *resolved* alpha (explicit ``Topology.async_`` fields override the
+    FLConfig fallback) so the moment scale always matches the FedAsync
+    aggregation weights."""
+    tau = jnp.asarray(staleness, jnp.float32)
+    a = cfg.staleness_alpha if alpha is None else alpha
+    return (1.0 + tau) ** jnp.float32(-a)
+
+
+def apply(cfg: FLConfig, params, delta, state, staleness=None,
+          staleness_alpha=None):
+    """One server step: ``params + f(delta)`` per ``cfg.server_opt``.
+
+    ``staleness`` (optional traced f32 scalar) is the mean staleness tau of
+    the aggregated delta — the AsyncEngine passes its flushed buffer's mean
+    at every flush; synchronous callers omit it (tau = 0).  It scales the
+    adaptive moment innovations by ``(1 + tau)^(-alpha)`` (module
+    docstring; DESIGN.md §8) and never touches plain ``fedavg``.
+    ``staleness_alpha`` overrides ``cfg.staleness_alpha`` (the AsyncEngine's
+    resolved Topology-level knob).
+    """
     lr = cfg.server_lr
     add = lambda p, u: jax.tree.map(
         lambda a, b: (a.astype(jnp.float32) + b).astype(a.dtype), p, u)
@@ -41,18 +86,28 @@ def apply(cfg: FLConfig, params, delta, state):
     if cfg.server_opt == "fedavg":
         return add(params, jax.tree.map(lambda d: lr * d, delta)), state
 
+    # staleness-scaled innovation (identity when staleness is omitted —
+    # the synchronous graph is unchanged)
+    if staleness is None:
+        _s = lambda x: x
+    else:
+        s = staleness_scale(cfg, staleness, staleness_alpha)
+        _s = lambda x: s * x
+
     if cfg.server_opt == "fedavgm":
-        m = jax.tree.map(lambda m_, d: cfg.server_beta1 * m_ + d, state["m"], delta)
+        m = jax.tree.map(lambda m_, d: cfg.server_beta1 * m_ + _s(d),
+                         state["m"], delta)
         return add(params, jax.tree.map(lambda m_: lr * m_, m)), {"m": m}
 
     b1, b2, eps = cfg.server_beta1, cfg.server_beta2, cfg.server_eps
-    m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d, state["m"], delta)
+    m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * _s(d),
+                     state["m"], delta)
     if cfg.server_opt == "fedadam":
-        v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) * d * d,
+        v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) * _s(d * d),
                          state["v"], delta)
     else:  # fedyogi
         v = jax.tree.map(
-            lambda v_, d: v_ - (1 - b2) * d * d * jnp.sign(v_ - d * d),
+            lambda v_, d: v_ - (1 - b2) * _s(d * d) * jnp.sign(v_ - d * d),
             state["v"], delta)
     upd = jax.tree.map(lambda m_, v_: lr * m_ / (jnp.sqrt(v_) + eps), m, v)
     return add(params, upd), {"m": m, "v": v}

@@ -227,12 +227,22 @@ class FLConfig:
     # ``(1 + tau)^(-staleness_alpha)``. ``latency_profile`` maps the FedMCCS
     # device resource profiles onto per-dispatch virtual latencies
     # (``data.pipeline.device_latency``): constant | resource | uniform |
-    # heavy_tail.
+    # heavy_tail. ``async_flush_deadline`` > 0 additionally flushes the
+    # (always non-empty after an arrival) buffer whenever the virtual clock
+    # passes the last flush time + deadline — adaptive buffer sizing: under
+    # heavy-tail stragglers the server stops waiting for the K-th upload
+    # once the deadline lapses (DESIGN.md §8). 0 = count-only FedBuff.
     async_buffer_size: int = 0
     staleness_alpha: float = 0.5
     latency_profile: str = "constant"
+    async_flush_deadline: float = 0.0
 
-    # server optimizer (beyond-paper: FedOpt family, Reddi et al. 2020)
+    # server optimizer (beyond-paper: FedOpt family, Reddi et al. 2020).
+    # On the async topology the adaptive members are staleness-aware: the
+    # moment innovations are scaled by (1 + tau)^(-staleness_alpha) with
+    # tau = the flushed buffer's mean staleness (server_opt.apply,
+    # DESIGN.md §8); synchronous topologies pass tau = 0 (scale 1, the
+    # classical FedOpt update).
     server_opt: str = "fedavg"        # fedavg | fedavgm | fedadam | fedyogi
     server_lr: float = 1.0
     server_beta1: float = 0.9

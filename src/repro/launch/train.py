@@ -46,9 +46,15 @@ def _parse():
                     help="async FedBuff K (1 = FedAsync, 0 = n_clients "
                          "= the synchronous limit)")
     ap.add_argument("--staleness-alpha", type=float, default=0.5,
-                    help="async staleness decay (1+tau)^(-alpha)")
+                    help="async staleness decay (1+tau)^(-alpha); also "
+                         "scales the adaptive server-opt moments by the "
+                         "flushed buffer's mean staleness (DESIGN.md §8)")
     ap.add_argument("--latency-profile", default="heavy_tail",
                     choices=["constant", "resource", "uniform", "heavy_tail"])
+    ap.add_argument("--flush-deadline", type=float, default=0.0,
+                    help="async adaptive buffer sizing: also flush when the "
+                         "virtual clock passes the last flush + deadline "
+                         "(0 = count-only FedBuff)")
     ap.add_argument("--seq", type=int, default=48)
     ap.add_argument("--batch-per-client", type=int, default=4)
     ap.add_argument("--devices", type=int, default=0,
@@ -91,7 +97,8 @@ def main():
                   sync_every=args.sync_every, eval_every=eval_every,
                   async_buffer_size=args.buffer_size,
                   staleness_alpha=args.staleness_alpha,
-                  latency_profile=args.latency_profile)
+                  latency_profile=args.latency_profile,
+                  async_flush_deadline=args.flush_deadline)
 
     if args.async_mode:
         # mesh-free virtual-clock path: --rounds counts server events
@@ -110,6 +117,7 @@ def main():
         print(f"async arch={cfg.name} clients={args.clients} "
               f"K={a.buffer_size} alpha={args.staleness_alpha} "
               f"profile={args.latency_profile} "
+              f"deadline={args.flush_deadline or 'off'} "
               f"params={model.param_count():,}")
         state = a.init_fn(jax.random.PRNGKey(0))
         state, ms = run_rounds(a.engine, state, data_fn, args.rounds,

@@ -32,9 +32,11 @@ def _data_fn(r):
     return sample_round(DATA, jax.random.fold_in(jax.random.PRNGKey(1), r))
 
 
-def _async_engine(fl, buffer_size, profile="constant", alpha=0.5):
+def _async_engine(fl, buffer_size, profile="constant", alpha=0.5,
+                  flush_deadline=None):
     topo = Topology.async_(C, buffer_size=buffer_size,
-                           staleness_alpha=alpha, latency_profile=profile)
+                           staleness_alpha=alpha, latency_profile=profile,
+                           flush_deadline=flush_deadline)
     return make_round_engine(MODEL, fl, topo, chunk=32, data_fn=_data_fn)
 
 
@@ -94,9 +96,113 @@ def test_degenerate_equivalence_property_over_seeds(seed):
                for l in jax.tree.leaves(s)) > 0.0
 
 
+@pytest.mark.parametrize("sopt", ["fedadam", "fedyogi"])
+def test_degenerate_bitexact_with_staleness_scaled_server_opt(sopt):
+    """The staleness-scaled adaptive server optimizers keep the degenerate
+    contract: tau == 0 at every flush, so the moment-innovation scale
+    (1+tau)^(-alpha) is exactly 1.0 and the async trajectory matches sync
+    bit-for-bit — params, comm_state, AND the optimizer moments m/v."""
+    fl = FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                  uplink_compressor="qsgd8", server_opt=sopt,
+                  server_lr=0.05)
+    n_gen = 3
+    sim = make_sim_step(MODEL, fl, C, chunk=32)
+    s_sync, _ = run_rounds(sim.engine, sim.init_fn(jax.random.PRNGKey(0)),
+                           _data_fn, n_gen, chunk=2)
+    eng = _async_engine(fl, buffer_size=C)
+    s_async, ms = run_rounds(eng, eng.init_fn(jax.random.PRNGKey(0)),
+                             _data_fn, n_gen * C, chunk=3)
+    _trees_equal(s_sync.params, s_async.params)
+    _trees_equal(s_sync.comm_state, s_async.comm_state)
+    _trees_equal(s_sync.server_opt_state, s_async.server_opt_state)
+    # the moments actually moved — the equality above is not vacuous
+    assert sum(float(jnp.abs(l).sum())
+               for l in jax.tree.leaves(s_async.server_opt_state["v"])) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# the tentpole contract: ONE shared dispatch body, structurally
+# ---------------------------------------------------------------------------
+
+def test_sync_and_async_share_one_dispatch_body(monkeypatch):
+    """Regression lock on the PR's structural claim: the async engine has no
+    private dispatch mirror — both the sim engine's wire and the async
+    engine's generation dispatch are built by ``engine.make_dispatch``, and
+    both topologies trace the SAME ``wire_rows`` body."""
+    from repro.core import async_engine as amod
+    from repro.core import engine as eng
+
+    # the op-for-op mirror of PR 4 is gone
+    assert not hasattr(amod, "_dispatch")
+
+    built = []
+    real_make = eng.make_dispatch
+
+    def counting_make(*a, **k):
+        d = real_make(*a, **k)
+        d.wire_calls = 0
+        real_rows = d.wire_rows
+
+        def counting_rows(*ra, **rk):
+            d.wire_calls += 1
+            return real_rows(*ra, **rk)
+
+        d.wire_rows = counting_rows
+        built.append(d)
+        return d
+
+    monkeypatch.setattr(eng, "make_dispatch", counting_make)
+    fl = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.2,
+                  uplink_compressor="qsgd8")
+    sim = make_sim_step(MODEL, fl, C, chunk=32)
+    aeng = _async_engine(fl, buffer_size=C)
+    # one dispatch body per engine build, from the one shared factory
+    assert len(built) == 2
+    d_sim, d_async = built
+
+    # tracing one sync round invokes the shared wire body...
+    state = sim.init_fn(jax.random.PRNGKey(0))
+    sim.step_fn(state, _data_fn(jnp.int32(0)))
+    assert d_sim.wire_calls >= 1
+    # ...and the async init dispatch + one event trace invoke the same body
+    # (init runs a full generation-0 dispatch; the event's flush re-traces)
+    astate = aeng.init_fn(jax.random.PRNGKey(0))
+    assert d_async.wire_calls >= 1
+    before = d_async.wire_calls
+    jax.jit(aeng.round_fn)(astate, _data_fn(jnp.int32(0)))
+    assert d_async.wire_calls > before
+
+
 # ---------------------------------------------------------------------------
 # genuinely-async invariants
 # ---------------------------------------------------------------------------
+
+
+def test_deadline_flush_fires_below_buffer_count():
+    """Adaptive buffer sizing (async_flush_deadline): with a K too large to
+    ever fill quickly and a short deadline, flushes are time-driven — the
+    server stops waiting for stragglers once the deadline lapses — and every
+    flush happens at-or-after its deadline tick."""
+    fl = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.2,
+                  uplink_compressor="qsgd8")
+    n_events = 24
+    # K = C means count-flush needs ALL clients; the heavy-tail stragglers
+    # make that slow, so the 0.75-deadline does the flushing instead
+    eng = _async_engine(fl, buffer_size=C, profile="heavy_tail",
+                        flush_deadline=0.75)
+    state, ms = run_rounds(eng, eng.init_fn(jax.random.PRNGKey(0)),
+                           _data_fn, n_events, chunk=4)
+    flushed = np.asarray(ms["flushed"])
+    assert flushed.sum() >= 2, "deadline must drive flushes"
+    # at least one flush fired below the count threshold (fill < C at pop:
+    # buffer_fill reports 0 on flushed events, so check versions advanced
+    # faster than C events per flush)
+    assert int(np.asarray(ms["server_version"])[-1]) > n_events // C
+    # a disabled deadline (the default) keeps pure-count FedBuff semantics
+    eng0 = _async_engine(fl, buffer_size=2, profile="heavy_tail")
+    _, ms0 = run_rounds(eng0, eng0.init_fn(jax.random.PRNGKey(0)),
+                        _data_fn, 8, chunk=4)
+    assert np.asarray(ms0["flushed"]).sum() == 4
 
 def test_fedbuff_clock_staleness_and_flush_cadence():
     fl = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.2,
