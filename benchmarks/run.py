@@ -45,6 +45,7 @@ from repro.data.synthetic import FedDataConfig, eval_batch, sample_round
 from repro.models.model import Model
 
 ROWS = []
+SMOKE = False        # --smoke: tiny CI legs (population 100k only, 2 rounds)
 
 
 def emit(name, us_per_call, **derived):
@@ -414,6 +415,139 @@ def bench_async(rounds):
          note="heavy-tail-stragglers-paper_lm")
 
 
+def bench_scale(rounds):
+    """ClientPopulation scale claim (DESIGN.md §9): 100k and 1M simulated
+    clients train paper_lm with per-client pipeline state bounded by the
+    residual-store capacity — memory flat in population size.  Also emits
+    the degenerate bit-exactness claim (capacity >= C, cohort = C ==> the
+    population path reproduces the dense sim/async engines bit-for-bit)
+    and the EF-convergence cost of the eviction policy (full store vs
+    evict-to-drop vs evict-to-sketch at the same cohort)."""
+    from repro.compress.residual_store import store_nbytes
+    from repro.core.engine import Topology, make_round_engine
+    from repro.core.population import ClientPopulation
+    from repro.data.pipeline import cohort_data_fn
+
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    base = dict(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                uplink_compressor="topk:0.05>>qsgd:8")
+    cohort, capacity = 16, 64
+
+    # --- memory flat in population size ------------------------------------
+    pops = [100_000] if SMOKE else [100_000, 1_000_000]
+    n_rounds = 2 if SMOKE else max(4, min(rounds, 8))
+    store_b = {}
+    for N in pops:
+        pop = ClientPopulation(n_clients=N, cohort=cohort, capacity=capacity,
+                               sampler="stride")
+        dcfg = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=N,
+                             seq_len=48, batch_per_client=4,
+                             heterogeneity=2.0)
+        data_fn = cohort_data_fn(pop, dcfg)
+        engine = make_round_engine(model, FLConfig(**base), Topology.sim(N),
+                                   chunk=48, population=pop)
+        state = engine.init_fn(jax.random.PRNGKey(0))
+        store_b[N] = store_nbytes(state.comm_state)
+        t0 = time.perf_counter()
+        state, ms = run_rounds(engine, state, data_fn, n_rounds, chunk=2)
+        jax.block_until_ready(ms["loss"])
+        us = (time.perf_counter() - t0) / n_rounds * 1e6
+        emit(f"scale/population_{N}", us,
+             loss_final=round(float(ms["loss"][-1]), 4),
+             store_mb=round(store_b[N] / 1e6, 3),
+             cohort=cohort, capacity=capacity, sampler="stride")
+    emit("scale/claim_memory_flat_in_population", 0.0,
+         holds=bool(len(set(store_b.values())) == 1),
+         store_mb=round(max(store_b.values()) / 1e6, 3),
+         populations="|".join(str(n) for n in store_b),
+         note="store-bytes-bounded-by-capacity-not-C")
+
+    # --- async leg: the same store drives the event engine -----------------
+    N = pops[0]
+    pop = ClientPopulation(n_clients=N, cohort=cohort, capacity=capacity,
+                           sampler="stride")
+    dcfg = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=N,
+                         seq_len=48, batch_per_client=4, heterogeneity=2.0)
+    data_fn = cohort_data_fn(pop, dcfg)
+    engine = make_round_engine(
+        model, FLConfig(latency_profile="heavy_tail", **base),
+        Topology.async_(N, buffer_size=max(2, cohort // 4)),
+        chunk=48, data_fn=data_fn, population=pop)
+    state = engine.init_fn(jax.random.PRNGKey(0))
+    n_events = n_rounds * cohort
+    t0 = time.perf_counter()
+    state, ms = run_rounds(engine, state, data_fn, n_events, chunk=8)
+    jax.block_until_ready(ms["loss"])
+    us = (time.perf_counter() - t0) / n_events * 1e6
+    emit(f"scale/async_population_{N}", us,
+         loss_final=round(float(ms["loss"][-1]), 4),
+         store_mb=round(store_nbytes(state.comm_state) / 1e6, 3),
+         vclock=round(float(ms["clock"][-1]), 1),
+         versions=int(np.asarray(ms["server_version"])[-1]))
+
+    # --- degenerate bit-exactness: capacity >= C, cohort = C ---------------
+    def _bitexact(async_mode):
+        C, R = 4, 3
+        fl = FLConfig(uplink_compressor="topk:0.25>>qsgd:8",
+                      **({"latency_profile": "constant"} if async_mode
+                         else {}), algorithm="fedavg", local_steps=2,
+                      local_lr=0.2)
+        dc_ = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=C,
+                            seq_len=32, batch_per_client=2,
+                            heterogeneity=1.5)
+        dfn = lambda r: sample_round(dc_, jax.random.fold_in(
+            jax.random.PRNGKey(1), r))
+        topo = (Topology.async_(C, buffer_size=C,
+                                latency_profile="constant")
+                if async_mode else Topology.sim(C))
+        outs = []
+        for pop_ in (None, ClientPopulation(n_clients=C, cohort=C,
+                                            capacity=C)):
+            e = make_round_engine(model, fl, topo, chunk=32, data_fn=dfn,
+                                  population=pop_)
+            st = e.init_fn(jax.random.PRNGKey(0))
+            st, _ = run_rounds(e, st, dfn, R * C if async_mode else R,
+                               chunk=4, donate=False)
+            comm = (st.comm_state["slab"] if isinstance(st.comm_state, dict)
+                    else st.comm_state)
+            outs.append((st.params, comm))
+        return all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(outs[0]),
+                            jax.tree.leaves(outs[1])))
+    emit("scale/claim_degenerate_bitexact", 0.0,
+         holds=bool(_bitexact(False) and _bitexact(True)),
+         note="params-and-comm_state-sync-and-async-capacity>=C")
+
+    # --- EF-convergence cost of the eviction policy ------------------------
+    N2, M2, R2 = 192, 24, (4 if SMOKE else max(10, min(rounds, 30)))
+    dcfg2 = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=N2,
+                          seq_len=48, batch_per_client=4, heterogeneity=2.0)
+    ev = eval_batch(FedDataConfig(vocab_size=cfg.vocab_size, num_clients=8,
+                                  seq_len=48, batch_per_client=4,
+                                  heterogeneity=2.0),
+                    jax.random.PRNGKey(99), batch_size=8)
+    for name, cap, policy in [("full_store", N2, "drop"),
+                              ("evict_drop", 32, "drop"),
+                              ("evict_sketch", 32, "sketch")]:
+        pop_ = ClientPopulation(n_clients=N2, cohort=M2, capacity=cap,
+                                eviction=policy)
+        dfn = cohort_data_fn(pop_, dcfg2)
+        e = make_round_engine(model, FLConfig(**base), Topology.sim(N2),
+                              chunk=48, population=pop_)
+        st = e.init_fn(jax.random.PRNGKey(0))
+        t0 = time.perf_counter()
+        st, ms = run_rounds(e, st, dfn, R2, chunk=4)
+        jax.block_until_ready(ms["loss"])
+        us = (time.perf_counter() - t0) / R2 * 1e6
+        ev_loss = float(model.loss(st.params, ev, chunk=48)[0])
+        emit(f"scale/eviction_{name}", us, eval_loss=round(ev_loss, 4),
+             loss_final=round(float(ms["loss"][-1]), 4),
+             capacity=cap, cohort=M2, population=N2,
+             store_mb=round(store_nbytes(st.comm_state) / 1e6, 3))
+
+
 def bench_engine(rounds):
     """RoundEngine acceptance row: run_rounds (scan, chunk=8) vs the Python
     round loop over the jit'd step — identical final params for fixed seed,
@@ -602,19 +736,79 @@ BENCHES = {
     "engine": bench_engine,
     "extensions": bench_extensions,
     "roofline": bench_roofline,
+    "scale": bench_scale,
 }
 
 
+def _write_bench_json(path: str, args) -> None:
+    """Per-PR perf trajectory record: git SHA, config hash, backend, and
+    every emitted row (claim rows — the ``holds=`` ones — pulled out
+    separately).  Committed as ``benchmarks/BENCH_<pr>.json``."""
+    import dataclasses
+    import hashlib
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sha = "unknown"
+    try:
+        sha = subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], cwd=root,
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        pass
+    config_hash = hashlib.sha256(repr(
+        (dataclasses.asdict(FLConfig()),
+         dataclasses.asdict(get_arch("paper_lm")))).encode()).hexdigest()[:16]
+    rows = []
+    for raw in ROWS:
+        name, us, derived = raw.split(",", 2)
+        d = dict(kv.split("=", 1) for kv in derived.split(";") if "=" in kv)
+        rows.append({"name": name, "us_per_call": float(us), "derived": d})
+    payload = {
+        "pr": 6,
+        "git_sha": sha,
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "config_hash": config_hash,
+        "args": {"only": args.only, "rounds": args.rounds,
+                 "smoke": args.smoke},
+        "claims": [r for r in rows if "holds" in r["derived"]],
+        "rows": rows,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+        fh.write("\n")
+    print(f"wrote {path} ({len(rows)} rows, "
+          f"{len(payload['claims'])} claims)", flush=True)
+
+
 def main() -> None:
+    global SMOKE
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names "
+                         f"(have: {','.join(BENCHES)})")
     ap.add_argument("--rounds", type=int, default=25)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI legs (e.g. scale: 100k clients, 2 rounds)")
+    ap.add_argument("--bench-json", default=None, metavar="PATH",
+                    help="also write the emitted rows + git SHA / config "
+                         "hash / backend as a per-PR JSON record")
     args = ap.parse_args()
+    SMOKE = args.smoke
+    only = None
+    if args.only:
+        only = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in only if s not in BENCHES]
+        if unknown:
+            ap.error(f"unknown suite(s) {unknown}; have {list(BENCHES)}")
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         fn(args.rounds)
+    if args.bench_json:
+        _write_bench_json(args.bench_json, args)
 
 
 if __name__ == '__main__':

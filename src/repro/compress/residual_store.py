@@ -1,0 +1,306 @@
+"""Bounded per-client pipeline state: the LRU slab + count-sketch tail.
+
+The dense ``comm_state`` contract ((C,)-led state arrays, one row per
+client) caps the simulated population at a few thousand clients — EF
+residuals alone are O(C x model).  At survey scale (10^5–10^6 devices,
+sub-percent cohorts) almost every row is cold at any moment, so the
+``ResidualStore`` replaces the dense lead with a **slab of ``capacity``
+slots** plus an id -> slot map:
+
+  * ``gather(state, ids)``  — dispatch boundary: read the cohort's rows.
+    Ids resident in the slab read their slot; absent ids read zeros
+    (``eviction="drop"`` — EF restarts, the classic partial-participation
+    approximation) or their count-sketch estimate (``eviction="sketch"`` —
+    evicted mass survives, lossily, in a fixed-size hashed tail reusing the
+    ``compress.sketch`` primitive).  Recovery is *energy-conserving*: the
+    thresholded estimate is scaled by the least-squares projection of the
+    tail onto its sketch before being handed out and removed, so a
+    recover -> EF -> re-fold cycle is contractive — naive
+    subtract-on-recover amplifies cross-client bucket collisions
+    exponentially (see ``gather``).
+  * ``scatter(state, ids, rows)`` — commit boundary (the wire hop in the
+    sync engines, the *arrival* event in the AsyncEngine): write the
+    cohort's advanced rows back.  Resident ids reuse their slot; new ids
+    take free slots first, then evict the least-recently-committed
+    occupants (whose rows fold into the tail under ``"sketch"``).
+
+Degenerate contract (the bit-exactness anchor, tests/test_population.py):
+with ``capacity >= C`` and every client touched in id order on first use,
+slot i <-> client i, nothing is ever evicted, and gather/scatter are
+value-identity — the engine arithmetic is bit-identical to the dense path.
+
+State is a plain dict pytree (checkpointable, scan-carryable):
+
+    {"slab":   tuple over param leaves of pipeline-state pytrees,
+               every array (capacity,)-led,
+     "client": (capacity,) int32 resident client id (-1 = free),
+     "stamp":  (capacity,) int32 last-commit clock,
+     "clock":  () int32,
+     "tail":   [eviction="sketch" only] tuple over param leaves of
+               (tail_rows, tail_cols) f32 sketches per float state array
+               ((0,) placeholder for non-float arrays, e.g. the DGC
+               warm-up round counter — those reset on re-entry)}
+
+Memory is ``capacity x state-row + tails`` — flat in the population size,
+which is the scale claim ``benchmarks --only scale`` measures.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress.sketch import bucket_and_sign, hash_params
+
+PyTree = Any
+
+EVICTION_POLICIES = ("drop", "sketch")
+_FREE = jnp.int32(-(2 ** 31))          # sort key: free slots first
+_HIT = jnp.int32(2 ** 31 - 1)          # sort key: never evict a hit slot
+
+
+def _state_templates(pipe, params):
+    """Abstract per-leaf pipeline state pytrees (``pipe.init`` eval_shape),
+    one per param leaf — the slab's row layout."""
+    return tuple(jax.eval_shape(functools.partial(pipe.init, tuple(p.shape)))
+                 for p in jax.tree.leaves(params))
+
+
+def store_nbytes(state) -> int:
+    """Concrete byte footprint of a store state (or any comm_state pytree) —
+    the quantity the scale benchmark asserts flat in population size."""
+    return int(sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(state)))
+
+
+class ResidualStore:
+    """Pure-function store ops for one (pipeline, params, capacity) binding.
+
+    All methods are jit-traceable over the state dict; ``ids`` must be
+    unique within one call (cohort sampling guarantees it — an affine
+    coprime stride or a permutation slice)."""
+
+    def __init__(self, pipe, params, capacity: int, eviction: str = "drop",
+                 tail_rows: int = 5, tail_cols: int = 16384,
+                 tail_seed: int = 23):
+        if eviction not in EVICTION_POLICIES:
+            raise ValueError(f"eviction must be one of {EVICTION_POLICIES}; "
+                             f"got {eviction!r}")
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1; got {capacity}")
+        self.capacity = int(capacity)
+        self.eviction = eviction
+        self.tail_rows = int(tail_rows)
+        self.tail_cols = int(tail_cols)
+        self.tail_seed = int(tail_seed)
+        self.templates = _state_templates(pipe, params)
+
+    # ------------------------------------------------------------------ init
+    def init(self) -> dict:
+        S = self.capacity
+        state = {
+            "slab": tuple(
+                jax.tree.map(lambda a: jnp.zeros((S,) + a.shape, a.dtype),
+                             tmpl) for tmpl in self.templates),
+            "client": jnp.full((S,), -1, jnp.int32),
+            "stamp": jnp.zeros((S,), jnp.int32),
+            "clock": jnp.zeros((), jnp.int32),
+        }
+        if self.eviction == "sketch":
+            state["tail"] = tuple(
+                jax.tree.map(
+                    lambda a: (jnp.zeros((self.tail_rows, self.tail_cols),
+                                         jnp.float32)
+                               if jnp.issubdtype(a.dtype, jnp.floating)
+                               else jnp.zeros((0,), jnp.float32)), tmpl)
+                for tmpl in self.templates)
+        return state
+
+    # ---------------------------------------------------------------- lookup
+    @staticmethod
+    def _match(state, ids):
+        """(found (M,), slot (M,), eq (M, S)) — slot is garbage when !found
+        and must stay masked."""
+        eq = ids[:, None] == state["client"][None, :]
+        return eq.any(axis=1), jnp.argmax(eq, axis=1), eq
+
+    # ------------------------------------------------------------- tail hash
+    def _coords(self, ids, n: int):
+        """Global flat coordinates id*n + j in uint32 (wraparound feeds the
+        multiplicative hash — aliasing across the 2^32 boundary is just one
+        more hash collision for the sketch to absorb)."""
+        j = jnp.arange(n, dtype=jnp.uint32)
+        return ids.astype(jnp.uint32)[:, None] * jnp.uint32(n) + j[None, :]
+
+    def _tail_add(self, tail, vals, ids, seed: int):
+        """tail + sketch of M client rows ``vals`` (M, n) at their global
+        coordinates.  Linear: rows zeroed by a mask contribute nothing."""
+        a, b = hash_params(self.tail_rows, seed)
+        coords = self._coords(ids, vals.shape[1])              # (M, n)
+
+        def one(v, i):
+            h, s = bucket_and_sign(i, a, b, self.tail_cols)    # (r, n)
+            sx = s * v.astype(jnp.float32)[None, :]
+            return jax.vmap(lambda hv, xv: jnp.zeros(
+                self.tail_cols, jnp.float32).at[hv].add(xv))(h, sx)
+
+        return tail + jax.vmap(one)(vals, coords).sum(0)
+
+    def _tail_estimate(self, tail, ids, n: int, seed: int):
+        """Median-of-rows recovery of M client rows (M, n) from the tail,
+        with heavy-hitter thresholding: a count-sketch estimate carries
+        ~sqrt(||tail||^2 / cols) collision noise per coordinate, so
+        coordinates below that floor are unrecoverable and reading them
+        back injects pure noise into the EF pipeline — they estimate to
+        exactly 0 (making ``sketch`` degrade toward ``drop`` rather than
+        toward divergence under fold pressure)."""
+        a, b = hash_params(self.tail_rows, seed)
+        coords = self._coords(ids, n)
+        # 4-sigma floor: with ~n/cols coordinates per bucket, a lower floor
+        # lets bucket noise masquerade as signal for EVERY coordinate in a
+        # hot bucket, and the recover -> EF -> re-fold cycle amplifies it
+        # exponentially (observed 100x/round at 2-sigma, 3 rows).
+        floor = 4.0 * jnp.sqrt((tail ** 2).sum(axis=1).mean()
+                               / self.tail_cols)
+
+        def one(i):
+            h, s = bucket_and_sign(i, a, b, self.tail_cols)
+            est = s * jax.vmap(lambda Sr, hv: Sr[hv])(tail, h)
+            med = jnp.median(est, axis=0)
+            return jnp.where(jnp.abs(med) > floor, med, 0.0)
+
+        return jax.vmap(one)(coords)
+
+    def _tail_arrays(self, state):
+        """Zipped flat (slab array, tail sketch, per-array seed) triples."""
+        out = []
+        for li, (slab_l, tail_l) in enumerate(zip(state["slab"],
+                                                  state["tail"])):
+            for ai, (sa, ta) in enumerate(zip(jax.tree.leaves(slab_l),
+                                              jax.tree.leaves(tail_l))):
+                out.append((li, ai, sa, ta,
+                            self.tail_seed + 101 * li + 7 * ai))
+        return out
+
+    # ---------------------------------------------------------------- gather
+    def gather(self, state, ids):
+        """Rows for ``ids`` (M,) with an (M,) lead on every array.  Resident
+        ids read their slot, absent ids read zeros (drop) or the tail
+        estimate (sketch — the estimate is moved OUT of the tail and into
+        the returned row).  Returns ``(rows, state)``; state changes only
+        under the sketch policy."""
+        found, slot, _ = self._match(state, ids)
+
+        def take(a):
+            rows = a[slot]
+            keep = found.reshape((-1,) + (1,) * (rows.ndim - 1))
+            return jnp.where(keep, rows, jnp.zeros_like(rows))
+
+        rows = tuple(jax.tree.map(take, slab_l) for slab_l in state["slab"])
+        if self.eviction != "sketch":
+            return rows, state
+
+        M = ids.shape[0]
+        miss = (~found).astype(jnp.float32)
+        flat_rows, rows_def = jax.tree.flatten(rows)
+        new_rows = list(flat_rows)
+        new_tails = {}
+        offset = 0
+        # walk (leaf, state-array) pairs in flatten order; the flatten order
+        # of rows matches slab/tail (identical tuple-of-pytrees structure)
+        for li, ai, _sa, ta, seed in self._tail_arrays(state):
+            r_arr = new_rows[offset]
+            if ta.size:
+                n = int(np.prod(r_arr.shape[1:])) if r_arr.ndim > 1 else 1
+                est = self._tail_estimate(ta, ids, n, seed)    # (M, n)
+                est = est * miss[:, None]
+                # Energy-conserving recovery: hand out gamma*est where
+                # gamma projects the tail onto sketch(est).  Raw
+                # subtract-on-recover AMPLIFIES — a heavy bucket hands its
+                # mass to every colliding coordinate of every queried
+                # client, and the recover -> EF -> re-fold cycle copies it
+                # (observed 30-70x tail growth per round).  The projection
+                # can only shrink ||tail||, and the energy handed out is
+                # ~1/rows of the energy removed, so the cycle contracts.
+                sk = self._tail_add(jnp.zeros_like(ta), est, ids, seed)
+                gamma = jnp.clip((ta * sk).sum()
+                                 / ((sk * sk).sum() + 1e-12), 0.0, 1.0)
+                est = gamma * est
+                new_rows[offset] = (r_arr
+                                    + est.reshape(r_arr.shape)
+                                    .astype(r_arr.dtype))
+                new_tails[(li, ai)] = ta - gamma * sk
+            offset += 1
+        assert offset == len(flat_rows), "slab/tail structure drift"
+        rows = jax.tree.unflatten(rows_def, new_rows)
+        state = dict(state, tail=self._rebuild_tail(state, new_tails))
+        return rows, state
+
+    def _rebuild_tail(self, state, updates: dict):
+        out = []
+        for li, tail_l in enumerate(state["tail"]):
+            leaves, tdef = jax.tree.flatten(tail_l)
+            leaves = [updates.get((li, ai), t)
+                      for ai, t in enumerate(leaves)]
+            out.append(jax.tree.unflatten(tdef, leaves))
+        return tuple(out)
+
+    # --------------------------------------------------------------- scatter
+    def scatter(self, state, ids, rows):
+        """Commit the cohort's rows.  Hits reuse their slot; misses take free
+        slots first, then the least-recently-committed occupied slots (one
+        ``argsort`` over the per-slot sort key — free < stamp < hit).  The
+        evicted occupants' rows fold into the tail under ``"sketch"`` and
+        are dropped under ``"drop"``.  Requires ``capacity >= len(ids)``
+        (enforced at engine build) so misses never land on a hit slot."""
+        S = self.capacity
+        M = ids.shape[0]
+        if M > S:
+            raise ValueError(f"cohort of {M} ids exceeds store capacity {S}")
+        client, stamp = state["client"], state["stamp"]
+        found, hit_slot, eq = self._match(state, ids)
+        hit_slots = eq.any(axis=0)                             # (S,)
+        key = jnp.where(hit_slots, _HIT,
+                        jnp.where(client < 0, _FREE, stamp))
+        order = jnp.argsort(key, stable=True)  # free, then LRU, hits last
+        rank = jnp.cumsum((~found).astype(jnp.int32)) - 1
+        slot = jnp.where(found, hit_slot,
+                         order[jnp.clip(rank, 0, S - 1)])
+
+        new_state = dict(state)
+        if self.eviction == "sketch":
+            old_ids = client[slot]                             # (M,)
+            evict = ((~found) & (old_ids >= 0)).astype(jnp.float32)
+            new_tails = {}
+            for li, ai, sa, ta, seed in self._tail_arrays(state):
+                if not ta.size:
+                    continue
+                vals = sa[slot].reshape(M, -1).astype(jnp.float32)
+                vals = vals * evict[:, None]
+                new_tails[(li, ai)] = self._tail_add(
+                    ta, vals, jnp.maximum(old_ids, 0), seed)
+            new_state["tail"] = self._rebuild_tail(state, new_tails)
+
+        def put(a, r):
+            return a.at[slot].set(r.astype(a.dtype))
+
+        new_state["slab"] = tuple(
+            jax.tree.map(put, slab_l, rows_l)
+            for slab_l, rows_l in zip(state["slab"], rows))
+        new_state["client"] = client.at[slot].set(ids.astype(jnp.int32))
+        new_state["stamp"] = stamp.at[slot].set(state["clock"])
+        new_state["clock"] = state["clock"] + 1
+        return new_state
+
+    # ----------------------------------------------------------------- specs
+    def specs(self):
+        """PartitionSpecs for the store state: fully replicated.  Slot count
+        is decoupled from the mesh client axes (a slot hosts whichever
+        client last committed), so unlike the dense ``comm_state_specs``
+        lead there is no axis to pin rows to."""
+        from jax.sharding import PartitionSpec as P
+        return jax.tree.map(lambda a: P(*([None] * jnp.ndim(a))),
+                            jax.eval_shape(self.init))

@@ -85,16 +85,18 @@ from repro.models.model import Model
 _INF = jnp.float32(jnp.inf)
 
 
-def _async_knobs(fl: FLConfig, topo) -> tuple:
+def _async_knobs(fl: FLConfig, topo, n_slots: int = 0) -> tuple:
     """Resolve (buffer_size K, staleness alpha, latency profile, flush
     deadline): explicit Topology fields win, FLConfig fields are the
-    CLI-facing fallback, K == 0 means full participation (K = C), and
-    deadline == 0 means count-only flushing."""
-    C = topo.n_clients
+    CLI-facing fallback, K == 0 means full participation (K = every slot),
+    and deadline == 0 means count-only flushing.  ``n_slots`` is the
+    in-flight slot count — n_clients for the dense build, the cohort size
+    for a ClientPopulation build."""
+    C = n_slots or topo.n_clients
     K = topo.buffer_size or fl.async_buffer_size or C
     if not (1 <= K <= C):
-        raise ValueError(f"async buffer_size must be in [1, n_clients]; "
-                         f"got {K} with C={C}")
+        raise ValueError(f"async buffer_size must be in [1, n_slots]; "
+                         f"got {K} with {C} slots")
     alpha = (topo.staleness_alpha if topo.staleness_alpha is not None
              else fl.staleness_alpha)
     profile = topo.latency_profile or fl.latency_profile
@@ -110,13 +112,23 @@ def _async_knobs(fl: FLConfig, topo) -> tuple:
 
 
 def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
-                       chunk: int = 512):
+                       chunk: int = 512, population=None):
     """Build the async event executor (a RoundEngine whose ``round_fn`` is
     one server event).  ``data_fn(version) -> batch`` must be traceable —
     the engine samples each dispatch generation's client batches *inside*
     the event scan, keyed on the server version at dispatch (the same
     function ``run_rounds`` receives, so a degenerate async run and a sync
-    run see identical data)."""
+    run see identical data).
+
+    With a ``population`` (ClientPopulation, DESIGN.md §9) the in-flight
+    slot axis shrinks from n_clients to ``population.cohort``: each slot
+    hosts one sampled client (``slot_client``), latency/size draws come
+    from the cohort batch (lazy per-cohort, never dense ``(C,)``), arrival
+    commits write the client's pipeline row into the bounded residual
+    store keyed by client id, and each flush re-dispatches the flushed
+    slots onto a freshly sampled cohort.  ``data_fn`` must then be
+    ``data.pipeline.cohort_data_fn`` over the same population so engine
+    and data agree on the cohort ids."""
     # late import: async_engine <-> engine is a module cycle by design
     # (the builder lives here, the Topology/RoundEngine types live there)
     from repro.core import engine as eng
@@ -133,15 +145,25 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
         raise ValueError("async topology replaces client selection with "
                          "completion order — use selection='all' and "
                          "cmfl_threshold=0")
+    if population is not None and population.n_clients != topo.n_clients:
+        raise ValueError(
+            f"population.n_clients ({population.n_clients}) must match "
+            f"Topology.async_(n_clients={topo.n_clients})")
 
     C = topo.n_clients
-    K, alpha, profile, deadline = _async_knobs(fl, topo)
+    # M: the in-flight slot count — every per-slot vector below is (M,).
+    # Dense build: one slot per client.  Population build: one per cohort
+    # member, with A["slot_client"] mapping slots to client ids.
+    M = population.cohort if population is not None else C
+    K, alpha, profile, deadline = _async_knobs(fl, topo, n_slots=M)
     terms, up, down = eng.ledger_terms(model, fl)
     stateful = up.stateful
+    store = (population.make_store(up, model.abstract_params())
+             if population is not None else None)
     # THE tentpole contract: this is the synchronous engine's dispatch body
     # (downlink >> local-update vmap >> wire-boundary barrier >> CommPipeline
     # encode/decode >> row aggregation), not a copy of it — DESIGN.md §8
-    dispatch = eng.make_dispatch(model, fl, up, down, C, chunk)
+    dispatch = eng.make_dispatch(model, fl, up, down, M, chunk)
 
     def init_fn(rng):
         params = model.init(rng)
@@ -149,27 +171,35 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
         k_loc, k_down, k_sel, k_up, k_next = jax.random.split(
             jax.random.PRNGKey(fl.seed), 5)
         batch0 = data_fn(jnp.zeros((), jnp.int32))
-        comm0 = comm_state_init(up, params, C) if stateful else None
+        if store is not None:
+            ids0 = population.cohort_ids(jnp.zeros((), jnp.int32))
+            rows0, comm0 = store.gather(store.init(), ids0)
+        else:
+            comm0 = comm_state_init(up, params, M) if stateful else None
+            rows0 = comm0
         # jit: eager arithmetic (e.g. the E=1 fast-path delta) differs from
         # the compiled scan's at ULP level via XLA FMA contraction, which
         # would break the degenerate bit-exactness contract
-        updates, losses, pending = jax.jit(dispatch)(params, batch0, comm0,
+        updates, losses, pending = jax.jit(dispatch)(params, batch0, rows0,
                                                      k_loc, k_down, k_up)
         lat = device_latency(profile, batch0["resources"], k_sel)
         A = {
             "clock": jnp.zeros((), jnp.float32),
-            "next_done": lat,                      # all C in flight
-            "version": jnp.zeros((C,), jnp.int32),
+            "next_done": lat,                      # all M in flight
+            "version": jnp.zeros((M,), jnp.int32),
             "server_version": jnp.zeros((), jnp.int32),
             "updates": updates,
-            "buf_w": jnp.zeros((C,), jnp.float32),
-            "buf_tau": jnp.zeros((C,), jnp.float32),
+            "buf_w": jnp.zeros((M,), jnp.float32),
+            "buf_tau": jnp.zeros((M,), jnp.float32),
             "losses": losses,
             "next_deadline": jnp.float32(deadline if deadline > 0
                                          else jnp.inf),
         }
         if stateful:
             A["pending_comm"] = pending
+        if population is not None:
+            A["slot_client"] = population.cohort_ids(jnp.zeros((), jnp.int32))
+            A["slot_size"] = batch0.get("sizes", jnp.ones((M,), jnp.float32))
         return FLState(
             params=params,
             server_opt_state=server_opt.init_state(fl.server_opt, params),
@@ -188,7 +218,7 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
         ctx["clock"] = jnp.maximum(A["clock"], A["next_done"][c])
         ctx["tau"] = A["server_version"] - A["version"][c]
         ctx["stale_w"] = (1.0 + ctx["tau"].astype(jnp.float32)) ** (-alpha)
-        ctx["onehot"] = (jnp.arange(C) == c)
+        ctx["onehot"] = (jnp.arange(M) == c)
         return ctx
 
     def hop_arrive(ctx):
@@ -206,12 +236,23 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
                                   ctx["tau"].astype(jnp.float32),
                                   A["buf_tau"])
         A2["clock"] = ctx["clock"]
-        if stateful:
+        if store is not None:
+            # commit the arriving slot's advanced pipeline row into the
+            # residual store, keyed by the CLIENT id the slot hosts — the
+            # wire boundary is the commit point (DESIGN.md §9): the server
+            # has consumed this payload, so the residual advance is final
+            c = ctx["c"]
+            row_c = tuple(
+                jax.tree.map(lambda p: p[c][None], A["pending_comm"][li])
+                for li in range(len(A["pending_comm"])))
+            ctx["new_comm"] = store.scatter(
+                st.comm_state, A["slot_client"][c][None], row_c)
+        elif stateful:
             sel = ctx["onehot"]
             ctx["new_comm"] = tuple(
                 jax.tree.map(
                     lambda p, o: jnp.where(
-                        sel.reshape((C,) + (1,) * (o.ndim - 1)), p, o),
+                        sel.reshape((M,) + (1,) * (o.ndim - 1)), p, o),
                     A["pending_comm"][li], st.comm_state[li])
                 for li in range(len(st.comm_state)))
         else:
@@ -234,19 +275,26 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
 
         def _merge(mb):
             return lambda n_, o: jnp.where(
-                mb.reshape((C,) + (1,) * (o.ndim - 1)), n_, o)
+                mb.reshape((M,) + (1,) * (o.ndim - 1)), n_, o)
 
         def flush(_):
             mask = jnp.isinf(A["next_done"]).astype(jnp.float32)
+            mb = mask > 0
             new_ver = A["server_version"] + 1
             # next generation key schedule == the sync engine's next round
             k_loc, k_down, k_sel, k_up, k_next = jax.random.split(st.rng, 5)
             nbatch = data_fn(new_ver)
-            # client dataset sizes are generation-invariant (seed-only
-            # tables), so the next generation's batch also provides the
-            # FedAvg weights for the flushing aggregation
-            sizes = nbatch.get("sizes", jnp.ones((C,), jnp.float32))
-            w = sizes * mask
+            if population is not None:
+                # slot weights come from the clients the slots HOST (the
+                # slot_size table recorded at their dispatch) — nbatch holds
+                # the NEXT cohort's sizes, different clients entirely
+                w = A["slot_size"] * mask
+            else:
+                # client dataset sizes are generation-invariant (seed-only
+                # tables), so the next generation's batch also provides the
+                # FedAvg weights for the flushing aggregation
+                sizes = nbatch.get("sizes", jnp.ones((M,), jnp.float32))
+                w = sizes * mask
             wsum = jnp.maximum(w.sum(), 1e-9)
             # the shared aggregation body: barrier + weighted mean, exactly
             # the sync wire's lowering (Dispatch.aggregate_rows)
@@ -261,10 +309,18 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
                                                    staleness=tau_mean,
                                                    staleness_alpha=alpha)
             loss = (w * A["losses"]).sum() / wsum
-            dec_rows, losses, pending = dispatch(new_params, nbatch, comm,
+            if population is not None:
+                # flushed slots take on the freshly sampled cohort's
+                # clients; still-in-flight slots keep theirs
+                ids_new = population.cohort_ids(new_ver)
+                ids_disp = jnp.where(mb, ids_new, A["slot_client"])
+            if store is not None:
+                rows_in, comm_out = store.gather(comm, ids_disp)
+            else:
+                rows_in, comm_out = comm, comm
+            dec_rows, losses, pending = dispatch(new_params, nbatch, rows_in,
                                                  k_loc, k_down, k_up)
             lat = device_latency(profile, nbatch["resources"], k_sel)
-            mb = mask > 0
             A3 = dict(
                 A,
                 updates=jax.tree.map(_merge(mb), dec_rows, A["updates"]),
@@ -282,20 +338,27 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
                     jax.tree.map(_merge(mb), pending[li],
                                  A["pending_comm"][li])
                     for li in range(len(pending)))
+            if population is not None:
+                A3["slot_client"] = ids_disp
+                A3["slot_size"] = jnp.where(
+                    mb, nbatch.get("sizes", jnp.ones((M,), jnp.float32)),
+                    A["slot_size"])
             return (new_params, new_sos, A3, k_next, loss,
-                    mask.sum(), jnp.float32(1.0))
+                    mask.sum(), jnp.float32(1.0), comm_out)
 
         def wait(_):
             return (st.params, st.server_opt_state, A, st.rng,
-                    A["losses"].mean(), jnp.float32(0.0), jnp.float32(0.0))
+                    A["losses"].mean(), jnp.float32(0.0), jnp.float32(0.0),
+                    comm)
 
         fire = ctx["fill"] >= K
         if deadline > 0:
             fire = fire | (ctx["clock"] >= A["next_deadline"])
-        (params, sos, A3, rng, loss, n_down, flushed) = jax.lax.cond(
-            fire, flush, wait, None)
+        (params, sos, A3, rng, loss, n_down, flushed, comm_out) = \
+            jax.lax.cond(fire, flush, wait, None)
         ctx.update(new_params=params, new_sos=sos, A=A3, new_rng=rng,
-                   loss=loss, n_down=n_down, flushed=flushed)
+                   loss=loss, n_down=n_down, flushed=flushed,
+                   new_comm=comm_out)
         return ctx
 
     def hop_ledger(ctx):
@@ -336,12 +399,14 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
         ("flush", hop_flush), ("ledger", hop_ledger),
         ("finalize", hop_finalize)))
 
+    aux = {"buffer_size": K, "staleness_alpha": alpha,
+           "latency_profile": profile, "flush_deadline": deadline,
+           "events_per_generation": K}
+    if population is not None:
+        aux.update(population=population, cohort=M)
     return eng.RoundEngine(
         topology=topo, program=program, round_fn=program,
-        init_fn=init_fn, n_clients=C, terms=terms,
-        aux={"buffer_size": K, "staleness_alpha": alpha,
-             "latency_profile": profile, "flush_deadline": deadline,
-             "events_per_generation": K},
+        init_fn=init_fn, n_clients=C, terms=terms, aux=aux,
     )
 
 

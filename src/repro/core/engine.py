@@ -447,7 +447,7 @@ class Dispatch:
     def model_batch(batch) -> dict:
         """Model inputs only (FL metadata keys stay out of the loss vmap)."""
         return {k: v for k, v in batch.items()
-                if k not in ("sizes", "resources")}
+                if k not in ("sizes", "resources", "ids")}
 
     def __call__(self, params, batch, comm_state, k_loc, k_down, k_up):
         params = self.downlink(params, k_down)
@@ -533,6 +533,8 @@ class _Wire:
     aggregate: Callable        # (deltas(C,..), weights, rng, comm_state)
     #                            -> (agg, new_comm_state)
     aggregate_dense: Callable  # (tree(C,..), weights, rng) -> agg  (SCAFFOLD)
+    needs_ids: bool = False    # population wires take the cohort ids too:
+    #                            aggregate(..., comm_state, ids)
 
 
 def _star_wire(mesh, pspecs, up, client_axis, abs_params, need_dense) -> _Wire:
@@ -568,13 +570,58 @@ def _sim_wire(dispatch: Dispatch, C) -> _Wire:
     return _Wire(aggregate=aggregate, aggregate_dense=aggregate_dense)
 
 
+def _population_wire(dispatch: Dispatch, store, M: int) -> _Wire:
+    """Sim wire over a sampled cohort with store-backed pipeline state
+    (DESIGN.md §9).  ``comm_state`` is the ResidualStore dict, not dense
+    (C,)-led rows: the cohort's rows are **gathered** at the dispatch
+    boundary, advanced by the same ``dispatch.wire_rows`` the dense wire
+    runs, and **scattered** back at the commit (the wire hop is the commit
+    point for synchronous rounds — the server has irrevocably consumed the
+    payload, so the residual advance is final).  With ``capacity >=
+    n_clients`` and ``cohort == n_clients`` gather/scatter are identities
+    and this wire is bit-exact vs :func:`_sim_wire`."""
+
+    def aggregate(deltas, weights, rng, comm_state, ids):
+        rows_in, st = store.gather(comm_state, ids)
+        rows, new_rows = dispatch.wire_rows(deltas, rows_in, rng)
+        st = store.scatter(st, ids, new_rows)
+        wsum = jnp.maximum(weights.sum(), 1e-9)
+        return dispatch.aggregate_rows(rows, weights, wsum), st
+
+    def aggregate_dense(tree, weights, rng):
+        wsum = jnp.maximum(weights.sum(), 1e-9)
+        return jax.tree.map(
+            lambda a: (weights.reshape((M,) + (1,) * (a.ndim - 1)) * a)
+            .sum(0) / wsum, tree)
+
+    return _Wire(aggregate=aggregate, aggregate_dense=aggregate_dense,
+                 needs_ids=True)
+
+
+def _star_population_wire(base: _Wire, store) -> _Wire:
+    """Star wire over a population: gather the cohort's store rows OUTSIDE
+    the shard_map collective, run the unchanged stateful aggregator on them
+    (it treats its ``comm_state`` argument as (C,)-led rows and returns the
+    advanced rows), then scatter the advance back into the store."""
+
+    def aggregate(deltas, weights, rng, comm_state, ids):
+        rows_in, st = store.gather(comm_state, ids)
+        agg, new_rows = base.aggregate(deltas, weights, rng, rows_in)
+        st = store.scatter(st, ids, new_rows)
+        return agg, st
+
+    return _Wire(aggregate=aggregate, aggregate_dense=base.aggregate_dense,
+                 needs_ids=True)
+
+
 # ---------------------------------------------------------------------------
 # The server-topology round (star + sim share this body verbatim)
 # ---------------------------------------------------------------------------
 
 def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
                           wire: _Wire, terms: dict, dispatch: Dispatch,
-                          C: int, chunk: int) -> RoundProgram:
+                          C: int, chunk: int,
+                          population=None) -> RoundProgram:
     scaffold = fl.algorithm == "scaffold"
     simulator = topo.kind == "sim"
 
@@ -583,6 +630,12 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
         rng, r_down, r_sel, r_up, r_next = jax.random.split(st.rng, 5)
         ctx.update(rng=rng, r_down=r_down, r_sel=r_sel, r_up=r_up,
                    r_next=r_next)
+        return ctx
+
+    def hop_cohort(ctx):
+        # this round's client ids — pure in (population.seed, round), so the
+        # data pipeline (cohort_data_fn) independently computes the SAME ids
+        ctx["ids"] = population.cohort_ids(ctx["state"].round)
         return ctx
 
     def hop_downlink(ctx):
@@ -640,8 +693,15 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
         batch = ctx["batch"]
         sizes = batch.get("sizes", jnp.ones((C,), jnp.float32))
         resources = batch.get("resources", jnp.ones((C, 4), jnp.float32))
+        avail = None
+        if population is not None and population.availability < 1.0:
+            # per-(id, round) dropout of sampled clients — statically
+            # skipped at availability == 1.0 (the degenerate contract)
+            avail = population.availability_mask(ctx["state"].round,
+                                                 ctx["ids"])
         weights = sel.select(fl, ctx["r_sel"], losses=ctx["first_losses"],
-                             resources=resources, sizes=sizes)
+                             resources=resources, sizes=sizes,
+                             availability=avail)
         ctx["weights"] = weights
         return ctx
 
@@ -669,8 +729,13 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
                   else jax.lax.optimization_barrier(ctx["deltas"]))
         weights = ctx["weights"]
         n_sel = (weights > 0).sum().astype(jnp.float32)
-        agg, new_comm = wire.aggregate(deltas, weights, ctx["r_up"],
-                                       ctx["state"].comm_state)
+        if wire.needs_ids:
+            agg, new_comm = wire.aggregate(deltas, weights, ctx["r_up"],
+                                           ctx["state"].comm_state,
+                                           ctx["ids"])
+        else:
+            agg, new_comm = wire.aggregate(deltas, weights, ctx["r_up"],
+                                           ctx["state"].comm_state)
         ctx.update(agg=agg, new_comm=new_comm, n_sel=n_sel)
         return ctx
 
@@ -719,10 +784,13 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
         ctx["metrics"] = metrics
         return ctx
 
-    hops = [("rng", hop_rng), ("downlink", hop_downlink),
-            ("model_batch", hop_model_batch),
-            ("dane_gradient", hop_dane_gradient),
-            ("local_update", hop_local_update), ("select", hop_select)]
+    hops = [("rng", hop_rng)]
+    if population is not None:
+        hops.append(("cohort", hop_cohort))
+    hops += [("downlink", hop_downlink),
+             ("model_batch", hop_model_batch),
+             ("dane_gradient", hop_dane_gradient),
+             ("local_update", hop_local_update), ("select", hop_select)]
     if simulator and fl.cmfl_threshold > 0:
         hops.append(("cmfl", hop_cmfl))
     hops.append(("wire", hop_wire))
@@ -738,7 +806,7 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
 # ---------------------------------------------------------------------------
 
 def _build_star(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
-                chunk: int) -> RoundEngine:
+                chunk: int, population=None) -> RoundEngine:
     cfg = model.cfg
     client_axis = topo.client_axis or cfg.client_axis
     axes = aggregation.client_axes(mesh, client_axis)
@@ -751,9 +819,22 @@ def _build_star(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
     terms, up, down = ledger_terms(model, fl)
     scaffold = fl.algorithm == "scaffold"
     stateful = up.stateful
+    store = None
+    if population is not None:
+        if scaffold:
+            raise ValueError(
+                "scaffold keeps dense (C, model) client controls — "
+                "incompatible with a streaming ClientPopulation")
+        if population.cohort != C:
+            raise ValueError(
+                f"star topology dispatches one cohort slot per mesh client "
+                f"({C}); got population.cohort={population.cohort}")
+        store = population.make_store(up, abs_params)
     dispatch = make_dispatch(model, fl, up, down, C, chunk)
     wire = _star_wire(mesh, pspecs, up, client_axis, abs_params,
                       need_dense=scaffold)
+    if store is not None:
+        wire = _star_population_wire(wire, store)
 
     clientful = shd.with_prefix(pspecs, axes if axes else None)
     state_specs = FLState(
@@ -762,7 +843,8 @@ def _build_star(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
                           for k in server_opt.state_keys(fl.server_opt)},
         control=pspecs if scaffold else None,
         client_controls=clientful if scaffold else None,
-        comm_state=(comm_state_specs(up, abs_params, pspecs, axes)
+        comm_state=(store.specs() if store is not None
+                    else comm_state_specs(up, abs_params, pspecs, axes)
                     if stateful else None),
         rng=P(), round=P(),
     )
@@ -781,7 +863,9 @@ def _build_star(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
             server_opt_state=server_opt.init_state(fl.server_opt, params),
             control=zerosf32() if scaffold else None,
             client_controls=zeros_clientful() if scaffold else None,
-            comm_state=(comm_state_init(up, params, C) if stateful else None),
+            comm_state=(store.init() if store is not None
+                        else comm_state_init(up, params, C)
+                        if stateful else None),
             rng=jax.random.PRNGKey(fl.seed),
             round=jnp.zeros((), jnp.int32),
         )
@@ -806,23 +890,39 @@ def _build_star(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
         return out
 
     program = _build_server_program(model, fl, topo, wire, terms, dispatch,
-                                    C, chunk)
+                                    C, chunk, population=population)
     return RoundEngine(
         topology=topo, program=program, round_fn=program,
         init_fn=init_fn, n_clients=C, terms=terms,
         state_shardings=state_shardings,
         batch_sharding_fn=batch_sharding_fn,
+        aux=({"population": population} if population is not None else {}),
     )
 
 
 def _build_sim(model: Model, fl: FLConfig, topo: Topology,
-               chunk: int) -> RoundEngine:
+               chunk: int, population=None) -> RoundEngine:
     C = topo.n_clients
     terms, up, down = ledger_terms(model, fl)
     scaffold = fl.algorithm == "scaffold"
     stateful = up.stateful
+    store = None
+    if population is not None:
+        if scaffold:
+            raise ValueError(
+                "scaffold keeps dense (C, model) client controls — "
+                "incompatible with a streaming ClientPopulation")
+        if population.n_clients != C:
+            raise ValueError(
+                f"population.n_clients ({population.n_clients}) must match "
+                f"Topology.sim(n_clients={C})")
+        C = population.cohort           # dispatch width = the cohort slice
+        store = population.make_store(up, model.abstract_params())
     dispatch = make_dispatch(model, fl, up, down, C, chunk)
-    wire = _sim_wire(dispatch, C)
+    if store is not None:
+        wire = _population_wire(dispatch, store, C)
+    else:
+        wire = _sim_wire(dispatch, C)
 
     def init_fn(rng):
         params = model.init(rng)
@@ -835,16 +935,21 @@ def _build_sim(model: Model, fl: FLConfig, topo: Topology,
             server_opt_state=server_opt.init_state(fl.server_opt, params),
             control=zf() if scaffold else None,
             client_controls=zc() if scaffold else None,
-            comm_state=comm_state_init(up, params, C) if stateful else None,
+            comm_state=(store.init() if store is not None
+                        else comm_state_init(up, params, C)
+                        if stateful else None),
             rng=jax.random.PRNGKey(fl.seed),
             round=jnp.zeros((), jnp.int32),
             prev_delta=zf() if fl.cmfl_threshold > 0 else None,
         )
 
     program = _build_server_program(model, fl, topo, wire, terms, dispatch,
-                                    C, chunk)
+                                    C, chunk, population=population)
     return RoundEngine(topology=topo, program=program, round_fn=program,
-                       init_fn=init_fn, n_clients=C, terms=terms)
+                       init_fn=init_fn, n_clients=topo.n_clients,
+                       terms=terms,
+                       aux=({"population": population, "cohort": C}
+                            if population is not None else {}))
 
 
 # ---------------------------------------------------------------------------
@@ -1259,9 +1364,36 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
 # public builder
 # ---------------------------------------------------------------------------
 
+# above this client count a dense sim/async build would silently allocate
+# O(C x model) comm_state rows (plus (C,)-wide dispatch) — the build refuses
+# and points at the streaming path instead (DESIGN.md §9)
+POPULATION_DENSE_LIMIT = 4096
+
+
+def _check_population(fl: FLConfig, topology: Topology) -> None:
+    C = topology.n_clients
+    if C <= POPULATION_DENSE_LIMIT:
+        return
+    if topology.kind == "sim" and not uplink_pipeline(fl).stateful:
+        return      # stateless sim keeps no per-client rows; C-wide is legal
+    raise ValueError(
+        f"{topology.kind} topology with n_clients={C} would allocate dense "
+        f"per-client state — O(C x model) comm_state rows for the stateful "
+        f"uplink pipeline"
+        + (" and a (C x model) update buffer"
+           if topology.kind == "async" else "")
+        + f" — above the {POPULATION_DENSE_LIMIT}-client dense limit. "
+        f"Pass a streaming population instead: "
+        f"make_round_engine(..., population=ClientPopulation("
+        f"n_clients={C}, cohort=1024)) (core.population; CLI: "
+        f"--population {C} --cohort 1024), which bounds per-client state "
+        f"by the residual-store capacity (DESIGN.md §9).")
+
+
 def make_round_engine(model: Model, fl: FLConfig, topology: Topology,
                       mesh: Optional[Mesh] = None,
-                      chunk: int = 512, data_fn=None) -> RoundEngine:
+                      chunk: int = 512, data_fn=None,
+                      population=None) -> RoundEngine:
     """Build the round executor for one (model, fl, topology) binding.
 
     The four legacy factories (``make_fl_train_step``,
@@ -1269,10 +1401,22 @@ def make_round_engine(model: Model, fl: FLConfig, topology: Topology,
     are thin wrappers over this.  The ``async`` topology additionally needs
     ``data_fn(version) -> batch`` at build time: its event scan samples each
     dispatch generation's batches internally, keyed on server version
-    (core.async_engine, DESIGN.md §7)."""
+    (core.async_engine, DESIGN.md §7).
+
+    ``population`` (a :class:`repro.core.population.ClientPopulation`)
+    switches the sim / async / star paths to streaming-cohort dispatch:
+    each round touches only ``population.cohort`` sampled clients and
+    per-client pipeline state lives in a bounded residual store
+    (DESIGN.md §9).  Dense builds above ``POPULATION_DENSE_LIMIT`` clients
+    are rejected."""
+    if population is not None and topology.kind in ("hier", "gossip"):
+        raise ValueError(
+            f"{topology.kind} topology pins every client to a mesh device — "
+            f"a streaming ClientPopulation only applies to star/sim/async")
     if topology.kind == "star":
         assert mesh is not None, "star topology needs a mesh"
-        engine = _build_star(model, fl, topology, mesh, chunk)
+        engine = _build_star(model, fl, topology, mesh, chunk,
+                             population=population)
     elif topology.kind == "hier":
         assert mesh is not None, "hier topology needs a mesh"
         engine = _build_hier(model, fl, topology, mesh, chunk)
@@ -1281,11 +1425,17 @@ def make_round_engine(model: Model, fl: FLConfig, topology: Topology,
         engine = _build_gossip(model, fl, topology, mesh, chunk)
     elif topology.kind == "sim":
         assert topology.n_clients > 0, "sim topology needs n_clients"
-        engine = _build_sim(model, fl, topology, chunk)
+        if population is None:
+            _check_population(fl, topology)
+        engine = _build_sim(model, fl, topology, chunk,
+                            population=population)
     elif topology.kind == "async":
         assert topology.n_clients > 0, "async topology needs n_clients"
+        if population is None:
+            _check_population(fl, topology)
         from repro.core.async_engine import build_async_engine
-        engine = build_async_engine(model, fl, topology, data_fn, chunk)
+        engine = build_async_engine(model, fl, topology, data_fn, chunk,
+                                    population=population)
     else:
         raise ValueError(f"unknown topology kind {topology.kind!r}")
     engine.eval_every = max(1, int(fl.eval_every))

@@ -1,0 +1,168 @@
+"""ClientPopulation — the client axis at survey scale.
+
+Every engine before this subsystem materialized the whole client axis:
+``(C,)`` latency/size/availability vectors, O(C x model) EF residuals in
+``FLState.comm_state``, and a data batch per client per round.  That caps
+C in the low thousands, while the survey's production regime is 10^5–10^6
+devices with a **sub-percent cohort** actually participating per round.
+
+``ClientPopulation`` inverts the layout: the population is a set of
+*deterministic per-id generators* (data, sizes, resources and availability
+all derive from ``fold_in(key, client_id)``), and each round materializes
+only a fixed-shape cohort slice of ``cohort`` ids.  Per-client pipeline
+state lives in a bounded :class:`~repro.compress.residual_store
+.ResidualStore` (gather on dispatch, scatter on commit) instead of dense
+``comm_state`` rows, so memory is flat in ``n_clients``.
+
+Degenerate contract: ``cohort == n_clients`` makes ``cohort_ids`` the
+identity ``arange(C)`` and (with ``capacity >= n_clients``) the store a
+value-identity — the population path is then bit-exact vs the dense
+engines, which is how tests/test_population.py pins it.
+
+Cohort sampling is pure in ``(seed, round_idx)`` — the engine and the data
+pipeline each call :meth:`cohort_ids` independently and must agree, the
+same determinism trick the rng-schedule hops use.  Two samplers:
+
+  * ``"shuffle"`` — a full ``jax.random.permutation`` slice; exact uniform
+    sampling without replacement, but O(C log C) per round, so it is the
+    default only up to 65536 clients.
+  * ``"stride"`` — an affine lattice ``(offset + s * arange(M)) % C`` with
+    ``gcd(s, C) == 1``: collision-free by construction, O(M) compute and
+    memory, and the stride is drawn per round from precomputed coprimes
+    near ``C / golden_ratio`` so successive cohorts decorrelate.  Strides
+    are capped at ``(2^31 - 1) // M`` so ``s * arange(M)`` stays exact in
+    uint32 before the mod.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress.residual_store import EVICTION_POLICIES, ResidualStore
+
+SAMPLERS = ("auto", "shuffle", "stride")
+_SHUFFLE_LIMIT = 65536
+
+
+def _coprime_strides(C: int, M: int, count: int = 64) -> np.ndarray:
+    """Static table of strides coprime to C near C/phi (phi = golden ratio),
+    capped so ``stride * (M - 1)`` fits in int32 — the uint32 lattice
+    arithmetic then cannot alias before the final ``% C``."""
+    cap = max(1, (2 ** 31 - 1) // max(M, 1))
+    target = min(max(1, int(C * 0.6180339887)), cap, C - 1) if C > 1 else 1
+    out = []
+    for d in range(C):
+        for s in (target - d, target + d):
+            if 1 <= s <= min(cap, C - 1) and math.gcd(s, C) == 1:
+                out.append(s)
+        if len(out) >= count:
+            break
+    return np.unique(np.asarray(out or [1], np.int64)).astype(np.uint32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientPopulation:
+    """Streaming client axis: ``n_clients`` ids, ``cohort`` per round.
+
+    ``capacity`` bounds the residual store (0 => ``min(n_clients,
+    2 * cohort)``, which degenerates to exactly ``n_clients`` when
+    ``cohort == n_clients``).  ``availability < 1.0`` drops each sampled
+    client i.i.d. per round via a per-id fold_in draw (the selection hop
+    zero-weights them); 1.0 is statically skipped so the degenerate path
+    stays bit-exact."""
+    n_clients: int
+    cohort: int = 0
+    capacity: int = 0
+    eviction: str = "drop"
+    sampler: str = "auto"
+    availability: float = 1.0
+    seed: int = 0
+    tail_rows: int = 5
+    tail_cols: int = 16384
+
+    def __post_init__(self):
+        if self.n_clients < 1:
+            raise ValueError(f"n_clients must be >= 1; got {self.n_clients}")
+        if self.cohort == 0:
+            object.__setattr__(self, "cohort", self.n_clients)
+        if not (1 <= self.cohort <= self.n_clients):
+            raise ValueError(
+                f"cohort must be in [1, n_clients={self.n_clients}]; "
+                f"got {self.cohort}")
+        if self.capacity == 0:
+            object.__setattr__(
+                self, "capacity", min(self.n_clients, 2 * self.cohort))
+        if self.capacity < self.cohort:
+            raise ValueError(
+                f"store capacity ({self.capacity}) must be >= cohort "
+                f"({self.cohort}): a round's scatter would collide")
+        if self.eviction not in EVICTION_POLICIES:
+            raise ValueError(f"eviction must be one of {EVICTION_POLICIES}; "
+                             f"got {self.eviction!r}")
+        if self.sampler not in SAMPLERS:
+            raise ValueError(f"sampler must be one of {SAMPLERS}; "
+                             f"got {self.sampler!r}")
+        if not (0.0 < self.availability <= 1.0):
+            raise ValueError(
+                f"availability must be in (0, 1]; got {self.availability}")
+        if self.sampler == "auto":
+            object.__setattr__(
+                self, "sampler",
+                "shuffle" if self.n_clients <= _SHUFFLE_LIMIT else "stride")
+        if self.sampler == "shuffle" and self.n_clients > _SHUFFLE_LIMIT:
+            raise ValueError(
+                f"sampler='shuffle' permutes all {self.n_clients} ids per "
+                f"round; use 'stride' above {_SHUFFLE_LIMIT}")
+        # host-side static stride table (traced code only indexes it)
+        if self.sampler == "stride" and self.cohort < self.n_clients:
+            object.__setattr__(self, "_strides",
+                               _coprime_strides(self.n_clients, self.cohort))
+
+    # ------------------------------------------------------------- sampling
+    def _key(self, round_idx):
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed + 7),
+                                  round_idx)
+
+    def cohort_ids(self, round_idx):
+        """(cohort,) int32 unique client ids for this round; traced-safe,
+        pure in (seed, round_idx).  ``cohort == n_clients`` => arange —
+        the degenerate identity the bit-exactness tests pin."""
+        C, M = self.n_clients, self.cohort
+        if M == C:
+            return jnp.arange(C, dtype=jnp.int32)
+        if self.sampler == "shuffle":
+            return jax.random.permutation(
+                self._key(round_idx), C)[:M].astype(jnp.int32)
+        strides = jnp.asarray(self._strides)
+        k_s, k_o = jax.random.split(self._key(round_idx))
+        s = strides[jax.random.randint(k_s, (), 0, strides.shape[0])]
+        off = jax.random.randint(
+            k_o, (), 0, C, dtype=jnp.uint32
+            if C > 2 ** 31 - 1 else jnp.int32).astype(jnp.uint32)
+        lattice = off + s * jnp.arange(M, dtype=jnp.uint32)
+        return (lattice % jnp.uint32(C)).astype(jnp.int32)
+
+    def availability_mask(self, round_idx, ids):
+        """(M,) f32 in {0,1}: per-(id, round) i.i.d. Bernoulli(availability)
+        draws.  Callers statically skip this when availability == 1.0."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 13),
+                                 round_idx)
+        u = jax.vmap(lambda i: jax.random.uniform(
+            jax.random.fold_in(key, i)))(ids)
+        return (u < self.availability).astype(jnp.float32)
+
+    # ---------------------------------------------------------------- store
+    def make_store(self, pipe, params) -> Optional[ResidualStore]:
+        """ResidualStore for this population, or None for a stateless
+        pipeline (no per-client rows to keep)."""
+        if not getattr(pipe, "stateful", False):
+            return None
+        return ResidualStore(pipe, params, self.capacity,
+                             eviction=self.eviction,
+                             tail_rows=self.tail_rows,
+                             tail_cols=self.tail_cols)

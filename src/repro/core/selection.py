@@ -35,13 +35,19 @@ def _top_m_mask(scores, m):
     return jnp.zeros((C,), jnp.float32).at[idx].set(1.0)
 
 
-def select(cfg: FLConfig, rng, *, losses, resources, sizes):
+def select(cfg: FLConfig, rng, *, losses, resources, sizes,
+           availability=None):
     """Returns per-client weights (C,) f32.
 
-    losses    : (C,) local first-minibatch loss (power-of-choice signal)
-    resources : (C, R) in [0, 1] simulated device profile (FedMCCS signal)
-    sizes     : (C,) client dataset sizes (FedAvg weighting)
+    losses       : (C,) local first-minibatch loss (power-of-choice signal)
+    resources    : (C, R) in [0, 1] simulated device profile (FedMCCS signal)
+    sizes        : (C,) client dataset sizes (FedAvg weighting)
+    availability : optional (C,) {0,1} mask — clients sampled into the
+                   cohort but offline this round (ClientPopulation churn);
+                   they are zero-weighted whatever the selection policy
     """
+    if availability is not None:
+        sizes = sizes * availability
     C = sizes.shape[0]
     m = cfg.clients_per_round or C
     m = min(m, C)

@@ -265,8 +265,12 @@ class FLState:
     control: PyTree | None            # SCAFFOLD global control variate c
     client_controls: PyTree | None    # SCAFFOLD per-client c_i   (C leading dim)
     comm_state: PyTree | None         # CommPipeline state (EF residual, DGC
-                                      # momentum, ...) — tuple over param
-                                      # leaves, C leading dim on every array
+                                      # momentum, ...) — dense: tuple over
+                                      # param leaves, C leading dim on every
+                                      # array; ClientPopulation builds: the
+                                      # bounded ResidualStore dict (slab /
+                                      # client / stamp / clock [/ tail]),
+                                      # capacity-led (DESIGN.md §9)
     rng: jax.Array
     round: jax.Array                  # int32 scalar
     prev_delta: PyTree | None = None  # CMFL relevance reference (last global

@@ -14,9 +14,24 @@ from typing import Iterator
 import jax
 import jax.numpy as jnp
 
-from repro.data.synthetic import FedDataConfig, sample_round
+from repro.data.synthetic import FedDataConfig, sample_cohort, sample_round
 
 LATENCY_PROFILES = ("constant", "resource", "uniform", "heavy_tail")
+
+
+def cohort_data_fn(population, cfg: FedDataConfig):
+    """``data_fn(round_idx)`` over a :class:`ClientPopulation`: samples the
+    round's cohort ids (pure in (population.seed, round_idx) — the engine
+    recomputes the identical ids) and materializes only those M clients'
+    batches via ``sample_cohort``, O(cohort) regardless of ``cfg
+    .num_clients``.  The batch carries ``"ids"`` so commit-side consumers
+    (the residual store, the async slot table) key state by client id."""
+    def fn(round_idx):
+        ids = population.cohort_ids(round_idx)
+        return sample_cohort(
+            cfg, jax.random.fold_in(
+                jax.random.PRNGKey(cfg.seed + 1), round_idx), ids)
+    return fn
 
 
 def device_latency(profile: str, resources, rng):

@@ -61,6 +61,18 @@ def client_clusters(cfg: FedDataConfig):
     return jax.random.randint(kz, (cfg.num_clients,), 0, cfg.num_clusters)
 
 
+def _token_stream(lg, r, B, S, V):
+    """One client's (B, S) token batch from its bigram logits ``lg``."""
+    k0, kseq = jax.random.split(r)
+    first = jax.random.randint(k0, (B,), 0, V)
+
+    def step(tok, k):
+        nxt = jax.random.categorical(k, lg[tok], axis=-1)
+        return nxt, nxt
+    _, toks = jax.lax.scan(step, first, jax.random.split(kseq, S))
+    return toks.T                                        # (B, S)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def sample_round(cfg: FedDataConfig, rng):
     """One round's client-major batch:
@@ -68,23 +80,56 @@ def sample_round(cfg: FedDataConfig, rng):
     logits, resources, sizes = _client_tables(cfg)
     V = logits.shape[-1]
     C, B, S = cfg.num_clients, cfg.batch_per_client, cfg.seq_len
-
-    def gen_stream(lg, r):
-        k0, kseq = jax.random.split(r)
-        first = jax.random.randint(k0, (B,), 0, V)
-
-        def step(tok, k):
-            nxt = jax.random.categorical(k, lg[tok], axis=-1)
-            return nxt, nxt
-        _, toks = jax.lax.scan(step, first, jax.random.split(kseq, S))
-        return toks.T                                    # (B, S)
-
     rngs = jax.random.split(rng, C)
-    tokens = jax.vmap(gen_stream)(logits, rngs)          # (C, B, S)
+    tokens = jax.vmap(lambda lg, r: _token_stream(lg, r, B, S, V))(
+        logits, rngs)                                    # (C, B, S)
     labels = jnp.roll(tokens, -1, axis=-1)
     mask = jnp.ones((C, B, S), jnp.float32).at[:, :, -1].set(0.0)
     return {"tokens": tokens, "labels": labels, "mask": mask,
             "sizes": sizes, "resources": resources}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def sample_cohort(cfg: FedDataConfig, rng, ids):
+    """A cohort's batch at O(M), never materializing the population.
+
+    ``_client_tables`` draws every per-client quantity as a (C,)-shaped
+    array, which is exactly what a 10^6-client population cannot afford.
+    Here each client's generator state derives from ``fold_in(key, id)``
+    instead — same global G/P structure, O(1) in ``cfg.num_clients`` —
+    so the streaming engines sample only the M cohort rows.  The per-id
+    draws are deterministic in (seed, id) and independent of the round
+    rng, matching the dense tables' round-invariance (the property the
+    async degenerate-equivalence proof leans on), but the realized values
+    differ from ``_client_tables``: this is the scale path, not a
+    drop-in replica of the dense one.
+
+    Returns the ``sample_round`` dict with an (M,) lead plus ``"ids"``."""
+    kg, kp, kz, kr, ks, ku = jax.random.split(jax.random.PRNGKey(cfg.seed), 6)
+    V = min(cfg.vocab_size, 256)
+    B, S = cfg.batch_per_client, cfg.seq_len
+    G = jax.random.normal(kg, (V, V)) * 1.5
+    P = jax.random.normal(kp, (cfg.num_clusters, V, V)) * 2.0
+    beta = cfg.heterogeneity
+
+    def per_client(i):
+        z = jax.random.randint(jax.random.fold_in(kz, i), (), 0,
+                               cfg.num_clusters)
+        gamma = jax.random.normal(jax.random.fold_in(ku, i),
+                                  (V,)) * 1.5 * cfg.client_skew
+        res = jax.random.uniform(jax.random.fold_in(kr, i), (4,),
+                                 minval=0.05)
+        size = 1.0 + jax.random.uniform(jax.random.fold_in(ks, i), ())
+        lg = G + beta * (P[z] + gamma[None, :])
+        toks = _token_stream(lg, jax.random.fold_in(rng, i), B, S, V)
+        return toks, size, res
+
+    tokens, sizes, resources = jax.vmap(per_client)(ids)
+    labels = jnp.roll(tokens, -1, axis=-1)
+    mask = jnp.ones(tokens.shape, jnp.float32).at[:, :, -1].set(0.0)
+    return {"tokens": tokens, "labels": labels, "mask": mask,
+            "sizes": sizes, "resources": resources,
+            "ids": ids.astype(jnp.int32)}
 
 
 def eval_batch(cfg: FedDataConfig, rng, batch_size=32):

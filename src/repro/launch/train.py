@@ -55,6 +55,22 @@ def _parse():
                     help="async adaptive buffer sizing: also flush when the "
                          "virtual clock passes the last flush + deadline "
                          "(0 = count-only FedBuff)")
+    ap.add_argument("--population", type=int, default=0,
+                    help="simulate this many clients via the streaming "
+                         "ClientPopulation path (mesh-free; works with "
+                         "--async too): per-round cohorts + bounded "
+                         "residual store (DESIGN.md §9); e.g. "
+                         "--population 1000000 --cohort 1024")
+    ap.add_argument("--cohort", type=int, default=1024,
+                    help="clients sampled per round (population mode)")
+    ap.add_argument("--store-capacity", type=int, default=0,
+                    help="residual-store slots (0 = min(population, "
+                         "2 x cohort))")
+    ap.add_argument("--eviction", default="drop",
+                    choices=["drop", "sketch"],
+                    help="residual-store eviction: drop the evicted "
+                         "client's pipeline state, or fold it into the "
+                         "count-sketch overflow tail")
     ap.add_argument("--seq", type=int, default=48)
     ap.add_argument("--batch-per-client", type=int, default=4)
     ap.add_argument("--devices", type=int, default=0,
@@ -99,6 +115,47 @@ def main():
                   staleness_alpha=args.staleness_alpha,
                   latency_profile=args.latency_profile,
                   async_flush_deadline=args.flush_deadline)
+
+    if args.population > 0:
+        # mesh-free streaming-cohort path (DESIGN.md §9): --population
+        # clients exist, --cohort train per round, per-client pipeline
+        # state bounded by the residual store. Composes with --async
+        # (slots = the cohort; --rounds counts server events).
+        from repro.compress.residual_store import store_nbytes
+        from repro.core.engine import (Topology, make_round_engine,
+                                       run_rounds)
+        from repro.core.population import ClientPopulation
+        from repro.data.pipeline import cohort_data_fn
+
+        N = args.population
+        pop = ClientPopulation(n_clients=N, cohort=min(args.cohort, N),
+                               capacity=args.store_capacity,
+                               eviction=args.eviction)
+        data = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=N,
+                             seq_len=args.seq,
+                             batch_per_client=args.batch_per_client,
+                             heterogeneity=1.5)
+        data_fn = cohort_data_fn(pop, data)
+        topo = (Topology.async_(N) if args.async_mode else Topology.sim(N))
+        engine = make_round_engine(model, fl, topo, chunk=args.seq,
+                                   data_fn=data_fn, population=pop)
+        state = engine.init_fn(jax.random.PRNGKey(0))
+        mb = (store_nbytes(state.comm_state) / 1e6
+              if state.comm_state is not None else 0.0)
+        print(f"population={N:,} cohort={pop.cohort} "
+              f"capacity={pop.capacity} eviction={pop.eviction} "
+              f"store={mb:.1f}MB params={model.param_count():,} "
+              f"{'async' if args.async_mode else 'sync'}")
+        state, ms = run_rounds(engine, state, data_fn, args.rounds,
+                               chunk=args.chunk)
+        for i in range(args.rounds):
+            led = jax.tree.map(lambda x, i=i: x[i], ms["ledger"])
+            print(f"round {i:>4} loss={float(ms['loss'][i]):.3f} "
+                  f"up={float(led.uplink_wire)/1e6:.2f}MB", flush=True)
+        if args.checkpoint:
+            checkpoint.save(args.checkpoint, state.params)
+            print("saved", args.checkpoint)
+        return
 
     if args.async_mode:
         # mesh-free virtual-clock path: --rounds counts server events

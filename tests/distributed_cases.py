@@ -398,6 +398,40 @@ def case_compressed_agg_collectives_in_hlo():
     print("case_compressed_agg_collectives_in_hlo OK")
 
 
+def case_population_star_bitexact():
+    """Degenerate ClientPopulation contract on the STAR topology (mesh
+    client axes, shard_map wire): with cohort == C and capacity >= C the
+    store-backed engine must reproduce the dense engine bit-for-bit in
+    params AND comm_state (the slab rows ARE the dense rows: slot i <->
+    client i, DESIGN.md §9)."""
+    from repro.core.engine import Topology, make_round_engine, run_rounds
+    from repro.core.population import ClientPopulation
+
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    mesh = mesh2()
+    fl = FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                  uplink_compressor="topk:0.25>>qsgd:8")
+
+    def data_fn(r):
+        return make_batch(cfg, 4, 2, 16, jax.random.fold_in(
+            jax.random.PRNGKey(1), r))
+
+    outs = []
+    for pop in (None, ClientPopulation(n_clients=4, cohort=4, capacity=4)):
+        e = make_round_engine(model, fl, Topology.star(), mesh=mesh,
+                              chunk=16, population=pop)
+        st = e.init_fn(jax.random.PRNGKey(0))
+        st, _ = run_rounds(e, st, data_fn, 3, chunk=1, donate=False)
+        comm = (st.comm_state["slab"] if isinstance(st.comm_state, dict)
+                else st.comm_state)
+        outs.append((st.params, comm))
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "population star engine diverged from dense"
+    print("case_population_star_bitexact OK")
+
+
 CASES = {k[5:]: v for k, v in list(globals().items())
          if k.startswith("case_")}
 

@@ -21,6 +21,7 @@ CASES = [
     "pipeline_chain_agg",
     "noniid_data_pipeline",
     "compressed_agg_collectives_in_hlo",
+    "population_star_bitexact",
 ]
 
 

@@ -65,3 +65,48 @@ def test_doc_spec_parses(doc, spec):
     # wire-cost claims, so a spec that builds but cannot size payloads
     # (grammar drift in a stage factory) still rots the doc
     assert comp.wire_bits(1 << 12) > 0 or comp.is_identity, (doc, spec)
+
+
+# ---------------------------------------------------------------------------
+# benchmark-suite references: every `--only <x>` in the docs must exist
+# ---------------------------------------------------------------------------
+
+_ONLY = re.compile(r"--only[= ]([a-zA-Z0-9_,]+)")
+
+
+def _registered_suites():
+    """The BENCHES registry out of benchmarks/run.py without running it
+    (the module guards execution behind __main__)."""
+    import importlib.util
+    path = os.path.join(ROOT, "benchmarks", "run.py")
+    spec = importlib.util.spec_from_file_location("benchmarks_run", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return set(mod.BENCHES)
+
+
+def _only_refs():
+    cases = []
+    for doc in DOCS + ["ROADMAP.md"]:
+        path = os.path.join(ROOT, doc)
+        if not os.path.exists(path):
+            continue
+        with open(path) as fh:
+            for m in _ONLY.finditer(fh.read()):
+                for suite in m.group(1).split(","):
+                    cases.append(pytest.param(doc, suite,
+                                              id=f"{doc}:{suite}"))
+    return cases
+
+
+def test_docs_reference_at_least_one_suite():
+    assert _only_refs(), "no `--only <suite>` references extracted"
+
+
+@pytest.mark.parametrize("doc,suite", _only_refs())
+def test_doc_only_suite_is_registered(doc, suite):
+    """A doc advertising ``benchmarks --only <x>`` for a suite that was
+    renamed or never registered rots in a reader's shell; fail here."""
+    assert suite in _registered_suites(), (
+        f"{doc} references benchmark suite {suite!r}; "
+        f"registered: {sorted(_registered_suites())}")

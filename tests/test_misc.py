@@ -61,6 +61,35 @@ def test_checkpoint_roundtrip():
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_checkpoint_roundtrip_population_store():
+    """The ClientPopulation residual-store comm_state (slab + id map +
+    sketch tail) is a plain dict pytree and must survive save/restore
+    bit-for-bit — resuming a 1M-client run needs the slab contents AND
+    the id->slot mapping intact (DESIGN.md §9)."""
+    from repro.core.engine import uplink_pipeline
+    from repro.core.population import ClientPopulation
+    from repro.core.types import FLConfig
+
+    pop = ClientPopulation(n_clients=1000, cohort=4, capacity=8,
+                           eviction="sketch", tail_cols=256)
+    pipe = uplink_pipeline(FLConfig(uplink_compressor="topk:0.25>>qsgd:8"))
+    params = {"w": jnp.zeros((12,), jnp.float32)}
+    store = pop.make_store(pipe, params)
+    s = store.init()
+    for r in range(3):          # populate slab, stamps, and the tail
+        ids = pop.cohort_ids(r)
+        rows, s = store.gather(s, ids)
+        rows = jax.tree.map(lambda a: a + jnp.float32(r + 1), rows)
+        s = store.scatter(s, ids, rows)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "store.npz")
+        save(path, s)
+        got = restore(path, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), s))
+        for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_selection_top_m_mask_exact_on_ties():
     """Regression (rank-based tie-break): ``scores >= thresh`` over-selected
     whole tie groups at the cut — the mask must have exactly m ones, with

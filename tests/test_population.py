@@ -1,0 +1,423 @@
+"""ClientPopulation + ResidualStore tests (DESIGN.md §9).
+
+The anchor is the degenerate contract: with ``cohort == n_clients`` and
+``capacity >= n_clients`` the streaming-population path must reproduce the
+dense sim/async engines **bit-for-bit** — params AND comm_state — including
+through ``@kernel`` compressor chains.  Around that: LRU-slab unit tests,
+count-sketch tail fold/recover (and its energy-conservation guarantee, the
+property that keeps the recover -> EF -> re-fold cycle from amplifying),
+sampler properties, and the dense-build guard rails.
+
+Fuzzed properties use ``hypothesis`` when installed and degrade to a
+fixed-seed parametrized sweep otherwise (same pattern as test_compressors).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis  # noqa: F401 — probe only; see `fuzz` below
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.compress.residual_store import (ResidualStore, store_nbytes)
+from repro.configs.registry import get_arch
+from repro.core.engine import (POPULATION_DENSE_LIMIT, Topology,
+                               make_round_engine, run_rounds,
+                               uplink_pipeline)
+from repro.core.population import ClientPopulation, _coprime_strides
+from repro.core.types import FLConfig
+from repro.data.pipeline import cohort_data_fn
+from repro.data.synthetic import FedDataConfig, sample_round
+
+
+def fuzz(*strategies, fallback, max_examples=10):
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(*strategies)(fn))
+        nargs = fn.__code__.co_argcount
+        argnames = ",".join(fn.__code__.co_varnames[:nargs])
+        vals = [t[0] for t in fallback] if nargs == 1 else fallback
+        return pytest.mark.parametrize(argnames, vals)(fn)
+    return deco
+
+
+def _st(builder):
+    return builder() if HAVE_HYPOTHESIS else None
+
+
+CFG = get_arch("paper_lm")
+PARAMS = {"w": jnp.zeros((40,), jnp.float32),
+          "b": jnp.zeros((8,), jnp.float32)}
+
+
+def _store(capacity=4, eviction="drop", **kw):
+    pipe = uplink_pipeline(FLConfig(uplink_compressor="topk:0.25>>qsgd:8"))
+    return ResidualStore(pipe, PARAMS, capacity, eviction=eviction, **kw)
+
+
+def _rows(store, ids, val):
+    """Constant-filled pipeline-state rows with an (M,) lead."""
+    zero, _ = store.gather(store.init(), jnp.asarray(ids, jnp.int32))
+    return jax.tree.map(lambda a: jnp.full_like(a, val), zero)
+
+
+def _ids(*xs):
+    return jnp.asarray(xs, jnp.int32)
+
+
+def _row_leaves(rows):
+    return jax.tree.leaves(rows)
+
+
+# ---------------------------------------------------------------------------
+# LRU slab
+# ---------------------------------------------------------------------------
+
+def test_slab_hit_roundtrip():
+    store = _store(capacity=4)
+    s = store.init()
+    s = store.scatter(s, _ids(7, 3), _rows(store, [7, 3], 2.5))
+    rows, _ = store.gather(s, _ids(3, 7))
+    for leaf in _row_leaves(rows):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.full_like(np.asarray(leaf), 2.5))
+
+
+def test_slab_miss_reads_zero_under_drop():
+    store = _store(capacity=4)
+    s = store.scatter(store.init(), _ids(7), _rows(store, [7], 1.0))
+    rows, _ = store.gather(s, _ids(9))
+    for leaf in _row_leaves(rows):
+        assert not np.asarray(leaf).any()
+
+
+def test_slab_lru_eviction_order():
+    """Misses take free slots first, then the least-recently-committed
+    occupant; hit slots are never reclaimed."""
+    store = _store(capacity=4)
+    s = store.init()
+    s = store.scatter(s, _ids(0, 1), _rows(store, [0, 1], 1.0))   # clock 0
+    s = store.scatter(s, _ids(2, 3), _rows(store, [2, 3], 2.0))   # clock 1
+    # client 1 commits again => fresh stamp; 0 is now the LRU occupant
+    s = store.scatter(s, _ids(1), _rows(store, [1], 3.0))         # clock 2
+    s = store.scatter(s, _ids(9), _rows(store, [9], 4.0))         # evicts 0
+    resident = set(np.asarray(s["client"]).tolist())
+    assert resident == {1, 2, 3, 9}
+    rows, _ = store.gather(s, _ids(0))
+    for leaf in _row_leaves(rows):                 # 0's state dropped
+        assert not np.asarray(leaf).any()
+    rows, _ = store.gather(s, _ids(1))
+    for leaf in _row_leaves(rows):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.full_like(np.asarray(leaf), 3.0))
+
+
+def test_scatter_rejects_oversized_cohort():
+    store = _store(capacity=2)
+    with pytest.raises(ValueError, match="exceeds store capacity"):
+        store.scatter(store.init(), _ids(0, 1, 2), _rows(store, [0, 1, 2], 1.0))
+
+
+def test_store_memory_flat_in_population():
+    """The scale claim at unit level: the store footprint depends on
+    capacity, never on how many clients exist or which ids pass through."""
+    small = ClientPopulation(n_clients=10_000, cohort=16, capacity=64)
+    large = ClientPopulation(n_clients=1_000_000, cohort=16, capacity=64)
+    pipe = uplink_pipeline(FLConfig(uplink_compressor="topk:0.25>>qsgd:8"))
+    b_small = store_nbytes(small.make_store(pipe, PARAMS).init())
+    b_large = store_nbytes(large.make_store(pipe, PARAMS).init())
+    assert b_small == b_large > 0
+
+
+# ---------------------------------------------------------------------------
+# count-sketch tail
+# ---------------------------------------------------------------------------
+
+def _sparse_rows(store, ids, coord, val):
+    zero, _ = store.gather(store.init(), jnp.asarray(ids, jnp.int32))
+    return jax.tree.map(
+        lambda a: (a.at[:, coord].set(val)
+                   if a.ndim == 2 and a.shape[1] > coord else a), zero)
+
+
+def test_sketch_tail_recovers_evicted_heavy_mass():
+    """A sparse heavy row survives eviction: fold into the tail, then a
+    later gather of the evicted id recovers most of the mass (count-sketch
+    heavy-hitter recovery), and the recovered mass leaves the tail."""
+    store = _store(capacity=1, eviction="sketch", tail_rows=5,
+                   tail_cols=1024)
+    s = store.init()
+    s = store.scatter(s, _ids(0), _sparse_rows(store, [0], 3, 5.0))
+    s = store.scatter(s, _ids(1), _rows(store, [1], 0.0))   # evicts + folds 0
+    tail_before = sum(float((t ** 2).sum()) for t in jax.tree.leaves(s["tail"]))
+    assert tail_before > 0.0
+    rows, s2 = store.gather(s, _ids(0))
+    got = [np.asarray(l) for l in _row_leaves(rows) if np.asarray(l).ndim == 2]
+    heavy = max(abs(float(l[0, 3])) for l in got if l.shape[1] > 3)
+    assert heavy > 2.5, f"recovered {heavy}, expected most of 5.0"
+    tail_after = sum(float((t ** 2).sum()) for t in jax.tree.leaves(s2["tail"]))
+    assert tail_after < tail_before
+
+
+@fuzz(_st(lambda: st.integers(0, 2 ** 16)),
+      fallback=[(0,), (7,), (1234,), (99999,)])
+def test_sketch_recovery_never_amplifies(seed):
+    """Energy conservation: a gather can only shrink the tail, whatever is
+    in it — the property that keeps recover -> EF -> re-fold contractive
+    (naive subtract-on-recover fails this and diverges in training)."""
+    store = _store(capacity=2, eviction="sketch", tail_rows=5,
+                   tail_cols=256)
+    key = jax.random.PRNGKey(seed)
+    s = store.init()
+    tail = jax.tree.map(
+        lambda t: jax.random.normal(jax.random.fold_in(key, t.size),
+                                    t.shape) if t.size else t, s["tail"])
+    s = dict(s, tail=tail)
+    before = sum(float((t ** 2).sum()) for t in jax.tree.leaves(s["tail"]))
+    _, s2 = store.gather(s, _ids(5, 11))
+    after = sum(float((t ** 2).sum()) for t in jax.tree.leaves(s2["tail"]))
+    assert after <= before * (1 + 1e-5)
+
+
+def test_sketch_fold_is_masked_linear():
+    """Zero rows fold to nothing: scattering only hits (no evictions)
+    leaves the tail untouched."""
+    store = _store(capacity=4, eviction="sketch", tail_cols=256)
+    s = store.init()
+    s = store.scatter(s, _ids(0, 1), _rows(store, [0, 1], 1.5))
+    s = store.scatter(s, _ids(0, 1), _rows(store, [0, 1], 2.5))  # all hits
+    assert all(not np.asarray(t).any() for t in jax.tree.leaves(s["tail"]))
+
+
+def test_checkpointable_state_is_plain_pytree():
+    store = _store(capacity=3, eviction="sketch")
+    leaves = jax.tree.leaves(store.init())
+    assert leaves and all(hasattr(l, "dtype") for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# samplers
+# ---------------------------------------------------------------------------
+
+def test_coprime_strides_are_coprime_and_bounded():
+    import math
+    for C, M in [(100_000, 1024), (65537, 16), (12, 5), (2, 1)]:
+        strides = _coprime_strides(C, M)
+        assert strides.size > 0
+        for s in strides.tolist():
+            assert 1 <= s <= (2 ** 31 - 1) // max(M, 1)
+            assert math.gcd(int(s), C) == 1
+
+
+@fuzz(_st(lambda: st.integers(0, 1000)),
+      fallback=[(0,), (1,), (17,), (555,)])
+def test_stride_cohorts_are_unique_and_in_range(r):
+    pop = ClientPopulation(n_clients=100_003, cohort=256, sampler="stride")
+    ids = np.asarray(pop.cohort_ids(r))
+    assert ids.dtype == np.int32
+    assert len(set(ids.tolist())) == 256
+    assert ids.min() >= 0 and ids.max() < 100_003
+
+
+def test_shuffle_cohorts_are_unique_and_vary():
+    pop = ClientPopulation(n_clients=1000, cohort=64, sampler="shuffle")
+    a = np.asarray(pop.cohort_ids(0))
+    b = np.asarray(pop.cohort_ids(1))
+    assert len(set(a.tolist())) == 64
+    assert not np.array_equal(a, b)
+
+
+def test_degenerate_cohort_is_identity():
+    pop = ClientPopulation(n_clients=8)
+    np.testing.assert_array_equal(np.asarray(pop.cohort_ids(3)),
+                                  np.arange(8, dtype=np.int32))
+    assert pop.capacity == 8
+
+
+def test_availability_mask_extremes_and_rate():
+    pop = ClientPopulation(n_clients=10_000, cohort=512, availability=0.5)
+    m = np.asarray(pop.availability_mask(0, pop.cohort_ids(0)))
+    assert set(np.unique(m).tolist()) <= {0.0, 1.0}
+    assert 0.3 < m.mean() < 0.7
+    full = ClientPopulation(n_clients=100, cohort=16)
+    assert np.asarray(full.availability_mask(0, full.cohort_ids(0))).all()
+
+
+def test_population_validation():
+    with pytest.raises(ValueError, match="cohort"):
+        ClientPopulation(n_clients=4, cohort=9)
+    with pytest.raises(ValueError, match="capacity"):
+        ClientPopulation(n_clients=100, cohort=10, capacity=5)
+    with pytest.raises(ValueError, match="shuffle"):
+        ClientPopulation(n_clients=10_000_000, cohort=8, sampler="shuffle")
+    with pytest.raises(ValueError, match="eviction"):
+        ClientPopulation(n_clients=8, eviction="lossless")
+    with pytest.raises(ValueError, match="availability"):
+        ClientPopulation(n_clients=8, availability=0.0)
+
+
+# ---------------------------------------------------------------------------
+# degenerate bit-exactness vs the dense engines
+# ---------------------------------------------------------------------------
+
+DATA = FedDataConfig(vocab_size=CFG.vocab_size, num_clients=4, seq_len=32,
+                     batch_per_client=2, heterogeneity=1.5)
+
+
+def _data_fn(r):
+    return sample_round(DATA, jax.random.fold_in(jax.random.PRNGKey(1), r))
+
+
+def _run_engine(model, fl, topo, pop, n, seed=0):
+    e = make_round_engine(model, fl, topo, chunk=32, data_fn=_data_fn,
+                          population=pop)
+    st = e.init_fn(jax.random.PRNGKey(seed))
+    st, _ = run_rounds(e, st, _data_fn, n, chunk=2, donate=False)
+    comm = (st.comm_state["slab"] if isinstance(st.comm_state, dict)
+            else st.comm_state)
+    return st.params, comm
+
+
+def _assert_bitexact(model, fl, topo, n, seed=0):
+    dense = _run_engine(model, fl, topo, None, n, seed)
+    pop = ClientPopulation(n_clients=4, cohort=4, capacity=4)
+    stream = _run_engine(model, fl, topo, pop, n, seed)
+    for what, a, b in [("params", dense[0], stream[0]),
+                      ("comm_state", dense[1], stream[1])]:
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            assert np.array_equal(np.asarray(la), np.asarray(lb)), (
+                f"{what} diverged: {fl.uplink_compressor} on {topo.kind}")
+
+
+@pytest.mark.parametrize("spec", [
+    "topk:0.25>>qsgd:8",            # stateful EF chain
+    "topk:0.25@kernel>>qsgd:8",     # same chain through the Pallas path
+    "qsgd8",                        # stateless (store is None)
+])
+def test_degenerate_bitexact_sim(spec):
+    from repro.models.model import Model
+    model = Model(CFG)
+    fl = FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                  uplink_compressor=spec)
+    _assert_bitexact(model, fl, Topology.sim(4), n=3)
+
+
+@fuzz(_st(lambda: st.integers(0, 2 ** 16)), fallback=[(0,), (42,)],
+      max_examples=3)
+def test_degenerate_bitexact_sim_any_seed(seed):
+    from repro.models.model import Model
+    model = Model(CFG)
+    fl = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.2,
+                  uplink_compressor="topk:0.25>>qsgd:8")
+    _assert_bitexact(model, fl, Topology.sim(4), n=2, seed=seed)
+
+
+def test_degenerate_bitexact_async():
+    from repro.models.model import Model
+    model = Model(CFG)
+    fl = FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                  uplink_compressor="topk:0.25>>qsgd:8",
+                  latency_profile="constant")
+    topo = Topology.async_(4, buffer_size=4, latency_profile="constant")
+    _assert_bitexact(model, fl, topo, n=8)
+
+
+# ---------------------------------------------------------------------------
+# partial cohorts actually train
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("eviction", ["drop", "sketch"])
+def test_partial_cohort_sim_trains(eviction):
+    from repro.models.model import Model
+    model = Model(CFG)
+    pop = ClientPopulation(n_clients=32, cohort=8, capacity=12,
+                           eviction=eviction, tail_cols=512)
+    dcfg = FedDataConfig(vocab_size=CFG.vocab_size, num_clients=32,
+                         seq_len=32, batch_per_client=2, heterogeneity=1.5)
+    dfn = cohort_data_fn(pop, dcfg)
+    fl = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.2,
+                  uplink_compressor="topk:0.25>>qsgd:8")
+    e = make_round_engine(model, fl, Topology.sim(32), chunk=32,
+                          population=pop)
+    st = e.init_fn(jax.random.PRNGKey(0))
+    b0 = store_nbytes(st.comm_state)
+    st, ms = run_rounds(e, st, dfn, 3, chunk=1, donate=False)
+    assert np.isfinite(np.asarray(ms["loss"])).all()
+    assert store_nbytes(st.comm_state) == b0
+    resident = np.asarray(st.comm_state["client"])
+    assert resident.max() < 32 and (resident >= -1).all()
+
+
+def test_partial_cohort_async_trains():
+    from repro.models.model import Model
+    model = Model(CFG)
+    pop = ClientPopulation(n_clients=64, cohort=8, capacity=16)
+    dcfg = FedDataConfig(vocab_size=CFG.vocab_size, num_clients=64,
+                         seq_len=32, batch_per_client=2, heterogeneity=1.5)
+    dfn = cohort_data_fn(pop, dcfg)
+    fl = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.2,
+                  uplink_compressor="topk:0.25>>qsgd:8",
+                  latency_profile="heavy_tail")
+    e = make_round_engine(model, fl, Topology.async_(64, buffer_size=2),
+                          chunk=32, data_fn=dfn, population=pop)
+    st = e.init_fn(jax.random.PRNGKey(0))
+    st, ms = run_rounds(e, st, dfn, 12, chunk=4, donate=False)
+    assert np.isfinite(np.asarray(ms["loss"])).all()
+    assert np.asarray(st.comm_state["client"]).max() < 64
+
+
+def test_availability_churn_runs():
+    from repro.models.model import Model
+    model = Model(CFG)
+    pop = ClientPopulation(n_clients=32, cohort=8, availability=0.75)
+    dcfg = FedDataConfig(vocab_size=CFG.vocab_size, num_clients=32,
+                         seq_len=32, batch_per_client=2, heterogeneity=1.5)
+    dfn = cohort_data_fn(pop, dcfg)
+    fl = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.2,
+                  uplink_compressor="qsgd8")
+    e = make_round_engine(model, fl, Topology.sim(32), chunk=32,
+                          population=pop)
+    st = e.init_fn(jax.random.PRNGKey(0))
+    st, ms = run_rounds(e, st, dfn, 2, chunk=1, donate=False)
+    assert np.isfinite(np.asarray(ms["loss"])).all()
+
+
+# ---------------------------------------------------------------------------
+# dense-build guard rails
+# ---------------------------------------------------------------------------
+
+def test_dense_stateful_above_limit_names_the_population_api():
+    from repro.models.model import Model
+    model = Model(CFG)
+    fl = FLConfig(uplink_compressor="topk:0.25>>qsgd:8")
+    with pytest.raises(ValueError) as ei:
+        make_round_engine(model, fl,
+                          Topology.sim(POPULATION_DENSE_LIMIT + 1), chunk=32)
+    msg = str(ei.value)
+    assert "ClientPopulation" in msg and "--population" in msg
+
+
+def test_dense_stateless_above_limit_is_legal():
+    from repro.models.model import Model
+    model = Model(CFG)
+    fl = FLConfig(uplink_compressor="qsgd8")
+    make_round_engine(model, fl, Topology.sim(POPULATION_DENSE_LIMIT + 1),
+                      chunk=32)     # builds: no per-client rows to allocate
+
+
+def test_population_rejects_gossip_and_scaffold():
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import Model
+    model = Model(CFG)
+    pop = ClientPopulation(n_clients=4, cohort=4)
+    with pytest.raises(ValueError, match="star/sim/async"):
+        make_round_engine(model, FLConfig(), Topology.gossip(),
+                          mesh=make_host_mesh(model=1), population=pop)
+    with pytest.raises(ValueError, match="scaffold"):
+        make_round_engine(model, FLConfig(algorithm="scaffold"),
+                          Topology.sim(4), chunk=32, population=pop)
