@@ -49,6 +49,8 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compress.wire_format import WIRE_FORMATS
+
 Payload = Dict[str, jax.Array]
 PyTree = Any
 
@@ -61,6 +63,7 @@ class CommTransform:
     carrier_key: Optional[str] = None   # payload entry a next stage refines
     backend: str = "jax"          # "jax" | "kernel" (Pallas; DESIGN.md §6)
     kernel_capable: bool = False  # stage has a Pallas-backed encode path
+    wire: str = "staged"          # "staged" | "packed" (DESIGN.md §10)
 
     # --- pipeline state ----------------------------------------------------
     def init(self, shape: Sequence[int]) -> PyTree:
@@ -158,13 +161,13 @@ class Identity(CommTransform):
 
 
 # ---------------------------------------------------------------------------
-# Registry + spec-string grammar (DESIGN.md §3, §6)
+# Registry + spec-string grammar (DESIGN.md §3, §6, §10)
 #
 #   spec     := stage (">>" stage)*
-#   stage    := name [":" arg ("," arg)*] ["@" backend]
+#   stage    := name [":" arg ("," arg)*] ("@" suffix)*
 #   name     := legacy registry name (exact match wins) | stage-factory name
 #   arg      := number (int or float)
-#   backend  := "jax" | "kernel"
+#   suffix   := "jax" | "kernel" (backend) | "fused" (packed wire format)
 #
 # Every pre-pipeline registry name ("qsgd8", "topk", "stc", "none", ...)
 # resolves unchanged, with identical wire_bits.  A "@kernel" suffix routes
@@ -172,6 +175,15 @@ class Identity(CommTransform):
 # ``backend`` kwarg sets the default for every stage of the spec (stages
 # without a kernel path keep the pure-JAX encode, but an *explicit*
 # "@kernel" on such a stage fails loudly).
+#
+# "@fused" selects the PACKED wire format (DESIGN.md §10): the payload is
+# the bit-packed int codes (2-bit ternary, nibble qsgd:<=4) instead of the
+# storage-dtype staging buffers, and "stc@fused" is the fused dense-STC
+# stage (codes over the full length, no indices).  ``wire_format="packed"``
+# sets the default for every stage of the spec, same degrade rules as the
+# backend kwarg; an explicit "@fused" on a stage with no packed format
+# fails loudly.  Legacy registry names stay pinned to the staged format —
+# their wire layout is frozen, only spec-grammar stages pack.
 # ---------------------------------------------------------------------------
 
 BACKENDS = ("jax", "kernel")
@@ -206,13 +218,25 @@ def _num(tok: str):
 
 
 def _make_stage(token: str, **kw) -> CommTransform:
-    token = token.strip()
-    token, at, suffix = token.partition("@")
-    token, explicit = token.strip(), (suffix.strip() if at else None)
-    backend = explicit if explicit is not None else kw.get("backend", "jax")
+    parts = [p.strip() for p in token.strip().split("@")]
+    token, suffixes = parts[0], parts[1:]
+    explicit_backend = explicit_wire = None
+    for s in suffixes:
+        if s == "fused":
+            explicit_wire = "packed"
+        elif s in BACKENDS:
+            explicit_backend = s
+        else:
+            raise ValueError(
+                f"unknown backend {s!r}; have {BACKENDS} (or 'fused' for "
+                f"the packed wire format)")
+    backend = explicit_backend or kw.get("backend", "jax")
+    wire = explicit_wire or kw.get("wire_format", "staged")
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
-    kw = dict(kw, backend=backend)
+    if wire not in WIRE_FORMATS:
+        raise ValueError(f"unknown wire format {wire!r}; have {WIRE_FORMATS}")
+    kw = dict(kw, backend=backend, wire=wire)
     if token in ("none", "identity", ""):
         stage = Identity()
     else:
@@ -227,10 +251,14 @@ def _make_stage(token: str, **kw) -> CommTransform:
             args = ([_num(a) for a in argstr.split(",") if a.strip()]
                     if argstr else [])
             stage = _STAGES[name](*args, **kw)
-    if explicit == "kernel" and not stage.kernel_capable:
+    if explicit_backend == "kernel" and not stage.kernel_capable:
         raise ValueError(
             f"stage {token!r} has no kernel backend (kernel-capable stages: "
             f"topk, qsgd, ternary, sketch — see DESIGN.md §6)")
+    if explicit_wire == "packed" and stage.wire != "packed":
+        raise ValueError(
+            f"stage {token!r} has no packed wire format (packable stages: "
+            f"ternary, qsgd with bits <= 4, stc — see DESIGN.md §10)")
     return stage
 
 

@@ -212,14 +212,26 @@ class MomentumCorrection(_Wrapper):
 
     def _anneal_mask(self, v, rounds):
         """Zero all but the top-k_eff coordinates of v, where the effective
-        fraction f_r = final^((r+1)/(W+1)) anneals down to final."""
+        fraction f_r = final^((r+1)/(W+1)) anneals down to final.
+
+        k_eff is traced (``rounds`` is carried state) but bounded by the
+        schedule's STATIC round-0 fraction final^(1/(W+1)), so one
+        ``lax.top_k`` over that widest prefix replaces a full sort and the
+        order statistic is gathered from the prefix — the same
+        construction as ``kernels.ops.stc_ternarize(max_fraction=...)``."""
         n = v.shape[0]
         expo = jnp.minimum(rounds + 1, self.warmup_rounds + 1) / \
             (self.warmup_rounds + 1.0)
         frac = jnp.exp(expo * jnp.log(self.final_fraction))
         k_eff = jnp.clip(jnp.round(n * frac).astype(jnp.int32), 1, n)
-        mag = jnp.sort(jnp.abs(v))[::-1]
-        thr = mag[k_eff - 1]
+        f_max = self.final_fraction ** (1.0 / (self.warmup_rounds + 1.0))
+        k_max = max(1, min(int(round(n * f_max)), n))
+        # masked min, not a gather: a slice/gather fused into top_k's
+        # output defeats XLA's TopkRewriter (full-sort fallback) — see
+        # kernels.ops._stc_threshold
+        prefix = jax.lax.top_k(jnp.abs(v), k_max)[0]
+        thr = jnp.min(jnp.where(jnp.arange(k_max) < jnp.minimum(k_eff, k_max),
+                                prefix, jnp.inf))
         return jnp.where(jnp.abs(v) >= thr, v, 0.0)
 
     def encode(self, state, rng, x):

@@ -84,51 +84,85 @@ class QSGD(CommTransform):
     round -> int8) pass through the Pallas kernel (``repro.kernels.qsgd``).
     The stochastic-rounding uniforms are sampled in the *pure-JAX blocked
     layout* on both backends, so the kernel path is bit-exact against the
-    reference (tests/test_kernel_parity.py)."""
+    reference (tests/test_kernel_parity.py).
+
+    ``wire="packed"`` (the ``@fused`` suffix; ``bits <= 4`` only) nibble-
+    packs the flat code vector: two codes per byte, ``8*ceil(n/2)`` wire
+    bits instead of ``8n``, ledger == payload bytes exactly (DESIGN.md
+    §10).  The kernel path fuses the pack into the quantize pass
+    (``repro.kernels.bitpack``) so the int8 codes never round-trip HBM."""
     kernel_capable = True
 
-    def __init__(self, bits=8, block=2048, backend="jax"):
+    def __init__(self, bits=8, block=2048, backend="jax", wire="staged"):
         assert 2 <= bits <= 8
+        if wire == "packed" and bits > 4:
+            raise ValueError(
+                f"qsgd:{bits} has no packed wire format — the nibble holds "
+                f"levels in [-8, 7], use bits <= 4 for '@fused' "
+                f"(DESIGN.md §10)")
         self.bits = bits
         self.block = block
         self.levels = 2 ** (bits - 1) - 1        # signed levels
         self.backend = backend
-        self.name = f"qsgd{bits}" + ("@kernel" if backend == "kernel" else "")
+        self.wire = wire
+        self.name = (f"qsgd{bits}"
+                     + ("@kernel" if backend == "kernel" else "")
+                     + ("@fused" if wire == "packed" else ""))
 
     def encode(self, state, rng, x):
+        n = x.shape[0]
         xb, nb, _ = _blocked(x.astype(jnp.float32), self.block)
         u = jax.random.uniform(rng, xb.shape, jnp.float32)
         if self.backend == "kernel":
             from repro.kernels import ops
-            n = x.shape[0]
             # same per-element uniforms as the pure path (pads sit at the
             # end of the flat vector in both blockings), and the same
             # short-input-adapted block (xb.shape[1]) — so the kernel
             # payload SHAPE matches the pure path exactly and a short
             # chain carrier (k < block) never ships full-width rows
+            if self.wire == "packed":
+                q4, scale = ops.qsgd_quantize_packed(x, u.reshape(-1)[:n],
+                                                     self.bits, xb.shape[1])
+                return {"q4": q4, "scale": scale}, state
             q, scale = ops.qsgd_quantize(x, u.reshape(-1)[:n],
                                          self.bits, xb.shape[1])
             return {"q": q, "scale": scale}, state
         scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
         y = xb / jnp.maximum(scale, 1e-30) * self.levels
         q = jnp.floor(y + u).astype(jnp.int8)
+        if self.wire == "packed":
+            from repro.compress.wire_format import pack4
+            return {"q4": pack4(q.reshape(-1)[:n]),
+                    "scale": scale[:, 0]}, state
         return {"q": q, "scale": scale[:, 0]}, state
 
     def decode(self, payload, n):
-        q = payload["q"].astype(jnp.float32)
+        if self.wire == "packed":
+            from repro.compress.wire_format import unpack4
+            block = max(1, min(self.block, n))    # mirror _blocked's adapt
+            nb = -(-n // block)
+            q = jnp.pad(unpack4(payload["q4"], n),
+                        (0, nb * block - n)).astype(jnp.float32)
+            q = q.reshape(nb, block)
+        else:
+            q = payload["q"].astype(jnp.float32)
         scale = payload["scale"][:, None]
         x = q / self.levels * scale
         return x.reshape(-1)[:n]
 
     def meta_bits(self, n):
         nb = -(-n // self.block)
+        if self.wire == "packed":
+            return 8.0 * (-(-n // 2)) + 32.0 * nb   # nibbles + f32 scales
         return 8.0 * n + 32.0 * nb               # int8 storage + f32 scales
 
     def meta_entropy_bits(self, n):
         nb = -(-n // self.block)
         # Elias-coded QSGD costs ~bits+1 per coordinate; at 8 bits the int8
         # dtype packing is already at least as tight, so take the min.
-        return min(float(self.bits + 1), 8.0) * n + 32.0 * nb
+        est = min(float(self.bits + 1), 8.0) * n + 32.0 * nb
+        # packed wire: the nibble packing may already beat the coder model
+        return min(est, self.meta_bits(n)) if self.wire == "packed" else est
 
     def meta_entropy_bits_given(self, n, hint=None):
         if not hint or hint.get("kind") != "top_tail":
@@ -139,7 +173,8 @@ class QSGD(CommTransform):
         nb = -(-n // self.block)
         bpc = _tail_elias_bits_per_coord(self.levels, float(hint["fraction"]),
                                          n, self.block)
-        return bpc * n + 32.0 * nb
+        est = bpc * n + 32.0 * nb
+        return min(est, self.meta_bits(n)) if self.wire == "packed" else est
 
 
 class UVeQ(CommTransform):
@@ -211,8 +246,13 @@ register("lfl8")(lambda block=2048, backend="jax", **kw:
 register("uveq")(lambda block=2048, **kw: UVeQ(4, block))
 register("hsq")(lambda block=2048, **kw: HSQ(block))
 
+# a GLOBAL wire_format="packed" degrades gracefully on qsgd:>4 (stays
+# staged, like backend="kernel" on a kernel-less stage); the explicit
+# "@fused" suffix on it still fails loudly in _make_stage
 register_stage("qsgd")(lambda bits=8, blk=None, block=2048, backend="jax",
-                       **kw: QSGD(int(bits), int(blk or block), backend))
+                       wire="staged", **kw:
+                       QSGD(int(bits), int(blk or block), backend,
+                            wire if int(bits) <= 4 else "staged"))
 register_stage("uveq")(lambda bits=4, blk=None, block=2048, **kw:
                        UVeQ(int(bits), int(blk or block)))
 register_stage("hsq")(lambda blk=None, block=2048, **kw: HSQ(int(blk or block)))

@@ -91,27 +91,49 @@ class Ternary(CommTransform):
     ``backend="kernel"``: signs + the |x| partial sums come from one fused
     ``ternarize_blocked`` pass. Signs are bit-exact; mu differs from the
     pure path by reduction *order* only (per-row partials then a row sum vs
-    one flat sum) — the documented bounded-ULP parity class."""
+    one flat sum) — the documented bounded-ULP parity class.
+
+    ``wire="packed"`` (the ``@fused`` suffix): the payload is the 2-bit
+    packed sign vector — ``8*ceil(n/4) + 32`` wire bits instead of
+    ``8n + 32``, ledger == payload bytes exactly (DESIGN.md §10).  The
+    kernel path packs inside the ternarise pass (``kernels.bitpack``)."""
     biased = True
     kernel_capable = True
 
-    def __init__(self, block=2048, backend="jax"):
+    def __init__(self, block=2048, backend="jax", wire="staged"):
         self.block = block
         self.backend = backend
-        self.name = "ternary" + ("@kernel" if backend == "kernel" else "")
+        self.wire = wire
+        self.name = ("ternary" + ("@kernel" if backend == "kernel" else "")
+                     + ("@fused" if wire == "packed" else ""))
 
     def encode(self, state, rng, x):
+        n = x.shape[0]
         if self.backend == "kernel":
             from repro.kernels import ops
+            if self.wire == "packed":
+                packed, abs_sum = ops.ternarize_signs_packed(x, self.block)
+                return {"mu": abs_sum / n, "sign2": packed}, state
             sign, abs_sum = ops.ternarize_signs(x, self.block)
-            return {"mu": abs_sum / x.shape[0], "sign": sign}, state
+            return {"mu": abs_sum / n, "sign": sign}, state
         mu = jnp.abs(x).mean()
-        return {"mu": mu, "sign": jnp.sign(x).astype(jnp.int8)}, state
+        sign = jnp.sign(x).astype(jnp.int8)
+        if self.wire == "packed":
+            from repro.compress.wire_format import pack2
+            return {"mu": mu, "sign2": pack2(sign)}, state
+        return {"mu": mu, "sign": sign}, state
 
     def decode(self, payload, n):
-        return payload["sign"].astype(jnp.float32) * payload["mu"]
+        if self.wire == "packed":
+            from repro.compress.wire_format import unpack2
+            sign = unpack2(payload["sign2"], n)
+        else:
+            sign = payload["sign"]
+        return sign.astype(jnp.float32) * payload["mu"]
 
     def meta_bits(self, n):
+        if self.wire == "packed":
+            return 8.0 * (-(-n // 4)) + 32.0     # 2-bit packed signs + mu
         return 8.0 * n + 32.0                    # int8 signs + f32 mu
 
     def meta_entropy_bits(self, n):
@@ -194,15 +216,80 @@ class RandMask(CommTransform):
         return 64.0
 
 
-def _stc(fraction=0.01, block=2048, backend="jax"):
+class FusedSTC(CommTransform):
+    """``stc@fused`` — the dense packed STC wire format (DESIGN.md §10).
+
+    The staged ``stc`` chain (top-k >> ternary) ships 32-bit indices plus
+    8-bit signs per survivor: ``40k + 32`` bits.  This stage ships 2-bit
+    ternary codes over the FULL length instead — no indices at all —
+    ``8*ceil(n/4) + 32 ≈ 2n`` bits, a strict win whenever the kept
+    fraction exceeds ~0.05 (and position-free, so it packs into a plain
+    dense collective).  The kernel path is ``ops.stc_ternarize`` end to
+    end as ONE pass: threshold -> sign -> 2-bit pack + mu partials, the
+    codes never round-tripping HBM (``kernels.bitpack``).
+
+    Support semantics: every |x| >= the k-th magnitude is kept, so exact
+    magnitude ties may keep MORE than k coordinates (the staged chain's
+    ``top_k`` breaks ties by index) — measure zero on float inputs, and
+    the reason fused-vs-staged parity is the bounded-ULP class while the
+    kernel-vs-jax parity of this stage is sign-exact."""
+    biased = True
+    kernel_capable = True
+    wire = "packed"
+
+    def __init__(self, fraction=0.01, block=2048, backend="jax"):
+        self.fraction = fraction
+        self.block = block
+        self.backend = backend
+        self.name = (f"stc{fraction:g}"
+                     + ("@kernel" if backend == "kernel" else "") + "@fused")
+
+    def encode(self, state, rng, x):
+        n = x.shape[0]
+        if self.backend == "kernel":
+            from repro.kernels import ops
+            packed, mu = ops.stc_ternarize_packed(x, self.fraction,
+                                                  self.block)
+            return {"mu": mu, "code2": packed}, state
+        from repro.compress.wire_format import pack2
+        k = _k(n, self.fraction)
+        mag = jnp.abs(x)
+        # min over the prefix, not a scalar slice: a slice fused into
+        # top_k defeats XLA's TopkRewriter — kernels.ops._stc_threshold
+        thresh = jnp.min(jax.lax.top_k(mag, k)[0])
+        keep = mag >= thresh
+        code = (jnp.sign(x) * keep).astype(jnp.int8)
+        mu = jnp.sum(jnp.where(keep, mag, 0.0)) / jnp.maximum(keep.sum(), 1)
+        return {"mu": mu, "code2": pack2(code)}, state
+
+    def decode(self, payload, n):
+        from repro.compress.wire_format import unpack2
+        return unpack2(payload["code2"], n).astype(jnp.float32) * \
+            payload["mu"]
+
+    def meta_bits(self, n):
+        return 8.0 * (-(-n // 4)) + 32.0         # 2-bit packed codes + mu
+
+    def meta_entropy_bits(self, n):
+        # same information as the staged STC chain: k gap-coded positions
+        # + 1 sign bit each (run-length over the 2-bit stream); never more
+        # than the packed wire itself
+        k = _k(n, self.fraction)
+        idx_bits = math.log2(max(n / k, 2.0)) + 2
+        return min(k * (idx_bits + 1.0) + 32.0, self.meta_bits(n))
+
+
+def _stc(fraction=0.01, block=2048, backend="jax", wire="staged"):
+    if wire == "packed":
+        return FusedSTC(fraction, block, backend)
     from repro.compress.pipeline import chain
     return chain(TopK(fraction, block, backend), Ternary(block, backend))
 
 
 register("topk")(lambda fraction=0.01, block=2048, backend="jax", **kw:
                  TopK(fraction, block, backend))
-register("stc")(lambda fraction=0.01, block=2048, backend="jax", **kw:
-                _stc(fraction, block, backend))
+register("stc")(lambda fraction=0.01, block=2048, backend="jax",
+                wire="staged", **kw: _stc(fraction, block, backend, wire))
 register("sbc")(lambda fraction=0.01, **kw: SBC(fraction))
 register("randmask")(lambda fraction=0.05, dp_sigma=0.0, **kw:
                      RandMask(fraction, dp_sigma))
@@ -211,12 +298,12 @@ register_stage("topk")(lambda frac=None, fraction=0.01, block=2048,
                        backend="jax", **kw:
                        TopK(float(frac if frac is not None else fraction),
                             int(block), backend))
-register_stage("ternary")(lambda block=2048, backend="jax", **kw:
-                          Ternary(int(block), backend))
+register_stage("ternary")(lambda block=2048, backend="jax", wire="staged",
+                          **kw: Ternary(int(block), backend, wire))
 register_stage("stc")(lambda frac=None, fraction=0.01, block=2048,
-                      backend="jax", **kw:
+                      backend="jax", wire="staged", **kw:
                       _stc(float(frac if frac is not None else fraction),
-                           int(block), backend))
+                           int(block), backend, wire))
 register_stage("sbc")(lambda frac=None, fraction=0.01, **kw:
                       SBC(float(frac if frac is not None else fraction)))
 register_stage("randmask")(lambda frac=None, fraction=0.05, dp_sigma=0.0, **kw:

@@ -36,6 +36,13 @@ One ``run_rounds`` step == one **server event** (a client upload arriving):
     ledger   — per-event CommLedger rows carry ``virtual_time`` so
                bytes-to-target and time-to-target read off one stack.
 
+Wire formats ride through unchanged: the buffered rows are whatever the
+shared dispatch's uplink pipeline emits, so ``FLConfig.wire_format=
+"packed"`` / per-stage ``@fused`` specs (DESIGN.md §10) move the bit-packed
+payload through dispatch, buffer, and flush with no async-specific code —
+the per-event ledger rows bill the packed byte counts
+(tests/test_kernel_parity.py::test_async_engine_moves_packed_payloads).
+
 **Dispatch is the shared body** (DESIGN.md §8): downlink, the batched
 local-update vmap, the wire-boundary ``optimization_barrier``, and the
 batched CommPipeline encode/decode all come from

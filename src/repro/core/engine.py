@@ -294,7 +294,8 @@ def uplink_pipeline(fl: FLConfig):
         frac = fl.topk_fraction ** (1.0 / (warmup + 1.0))
     up = make_compressor(fl.uplink_compressor, fraction=frac,
                          block=fl.qsgd_block, rows=fl.sketch_rows,
-                         cols=fl.sketch_cols, backend=fl.backend)
+                         cols=fl.sketch_cols, backend=fl.backend,
+                         wire_format=fl.wire_format)
     if warmup > 0 and not up.is_identity:
         # the widened capacity must actually reach the wire: specs with an
         # explicit per-stage fraction ("topk:0.01>>...") override the
@@ -302,7 +303,8 @@ def uplink_pipeline(fl: FLConfig):
         at_target = make_compressor(fl.uplink_compressor,
                                     fraction=fl.topk_fraction,
                                     block=fl.qsgd_block, rows=fl.sketch_rows,
-                                    cols=fl.sketch_cols, backend=fl.backend)
+                                    cols=fl.sketch_cols, backend=fl.backend,
+                                    wire_format=fl.wire_format)
         if up.wire_bits(1 << 16) == at_target.wire_bits(1 << 16):
             raise ValueError(
                 "dgc_warmup_rounds needs a fraction-kwarg-driven uplink "
@@ -328,7 +330,7 @@ def ledger_terms(model: Model, fl: FLConfig):
     """Static per-selected-client byte terms for the round ledger."""
     up = uplink_pipeline(fl)
     down = make_compressor(fl.downlink_compressor, block=fl.qsgd_block,
-                           backend=fl.backend)
+                           backend=fl.backend, wire_format=fl.wire_format)
     sizes = _param_sizes(model)
     # SCAFFOLD ships control variates, FedDANE ships a gradient round: 2x
     scaff = 2.0 if fl.algorithm in ("scaffold", "feddane") else 1.0
@@ -975,7 +977,8 @@ def _build_hier(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
     # comm_state threads through the edge hop, closing the stateless gap)
     up = uplink_pipeline(fl)
     pod_comp = make_compressor(fl.pod_compressor, block=fl.qsgd_block,
-                               backend=fl.backend)
+                               backend=fl.backend,
+                               wire_format=fl.wire_format)
     stateful = up.stateful
 
     nparams = _param_sizes(model)
@@ -1210,7 +1213,8 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
             "biased pipelines) instead")
     comp = make_compressor(fl.uplink_compressor, fraction=fl.topk_fraction,
                            block=fl.qsgd_block, rows=fl.sketch_rows,
-                           cols=fl.sketch_cols, backend=fl.backend)
+                           cols=fl.sketch_cols, backend=fl.backend,
+                           wire_format=fl.wire_format)
     if comp.biased and fl.error_feedback:
         comp = error_feedback(comp)
     stateful = comp.stateful

@@ -189,6 +189,12 @@ class FLConfig:
                                       # hop: "jax" (pure) | "kernel" (Pallas;
                                       # per-stage "@kernel" suffixes in the
                                       # spec override — DESIGN.md §6)
+    wire_format: str = "staged"       # payload format for every wire hop:
+                                      # "staged" (storage-dtype buffers,
+                                      # bit-exact with pre-packing engines) |
+                                      # "packed" (bit-packed int codes on the
+                                      # collective; per-stage "@fused"
+                                      # suffixes override — DESIGN.md §10)
     topk_fraction: float = 0.01
     sketch_rows: int = 5
     sketch_cols: int = 4096

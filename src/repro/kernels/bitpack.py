@@ -1,0 +1,173 @@
+"""Pallas TPU kernels: bit-packed wire formats, fused into the encode pass.
+
+The staged kernels (``ternary.py``, ``qsgd.py``) emit int8 codes that a
+separate pack pass would have to re-read from HBM.  These kernels fuse the
+bitpack into the quantize/ternarize tile loop, so per grid step the f32 tile
+is read once and only the *packed* bytes are written — the uncompressed
+tensor and the unpacked codes never round-trip HBM (DESIGN.md §10):
+
+  * ``ternarize_pack_blocked`` — threshold -> sign -> 2-bit pack + the mu
+    partial sums, one pass (the fused dense-STC wire format).
+  * ``qsgd_pack_blocked``      — scale -> normalise -> stochastic round ->
+    nibble pack + per-row scale, one pass (``bits <= 4`` only).
+  * ``pack_codes_blocked`` / ``unpack_codes_blocked`` — standalone pack and
+    unpack passes over an int8 code matrix (2 or 4 bits/code), used by the
+    round-trip parity tests and as the building block for future
+    compress-into-collective fusions.
+
+Byte layout matches ``repro.compress.wire_format`` exactly: little-endian
+fields within each byte, byte ``j`` of a row covering codes ``4j..4j+3``
+(2-bit) or ``2j..2j+1`` (4-bit).  ``block`` must be divisible by the codes
+per byte, so the flattened packed rows equal the flat-vector packing of the
+flattened codes — the cross-backend payload-identity the parity harness
+asserts.  The strided lane slicing (``u[:, 0::4]``) interprets cleanly on
+CPU; on Mosaic it lowers to lane shifts/selects (packed widths stay lane
+multiples: 2048/4 = 512).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 8
+
+
+def _pack_lanes(u, bits):
+    """uint8 fields (ROWS, block) -> packed bytes (ROWS, block*bits//8)."""
+    if bits == 2:
+        return (u[:, 0::4] | (u[:, 1::4] << 2) | (u[:, 2::4] << 4)
+                | (u[:, 3::4] << 6))
+    return u[:, 0::2] | (u[:, 1::2] << 4)
+
+
+def _unpack_lanes(p, bits):
+    """packed bytes (ROWS, pblock) -> int8 codes (ROWS, pblock*8//bits),
+    sign-extended from the ``bits``-bit field."""
+    per = 8 // bits
+    rep = jnp.repeat(p, per, axis=1)
+    sh = (jax.lax.broadcasted_iota(jnp.uint8, rep.shape, 1) % per) * bits
+    mask, off = (3, 2) if bits == 2 else (15, 8)
+    u = (rep >> sh) & mask
+    return ((u + off) & mask).astype(jnp.int8) - off
+
+
+def _tern_pack_kernel(x_ref, t_ref, packed_ref, psum_ref, pcnt_ref):
+    x = x_ref[...]                                   # (ROWS, block) f32
+    t = t_ref[0]
+    mag = jnp.abs(x)
+    keep = mag >= t
+    code = (jnp.sign(x) * keep).astype(jnp.int8)
+    packed_ref[...] = _pack_lanes((code & 3).astype(jnp.uint8), 2)
+    psum_ref[...] = jnp.sum(jnp.where(keep, mag, 0.0), axis=1)
+    pcnt_ref[...] = jnp.sum(keep.astype(jnp.float32), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ternarize_pack_blocked(xb, thresh, interpret=False):
+    """xb (nb, block) f32, thresh () f32 -> (packed uint8 (nb, block//4),
+    psum f32 (nb,), pcnt f32 (nb,)).  Pad lanes (x == 0) pack to zero bytes
+    for any threshold, so slicing the flat bytes to ceil(n/4) is exact."""
+    nb, block = xb.shape
+    assert nb % ROWS == 0 and block % 4 == 0, (nb, block)
+    grid = (nb // ROWS,)
+    t = jnp.reshape(thresh.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _tern_pack_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS, block // 4), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block // 4), jnp.uint8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb, t)
+
+
+def _qsgd_pack_kernel(x_ref, u_ref, packed_ref, scale_ref, *, levels):
+    x = x_ref[...]                                   # (ROWS, block) f32
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    y = x / jnp.maximum(scale, 1e-30) * levels
+    q = jnp.floor(y + u_ref[...]).astype(jnp.int8)
+    packed_ref[...] = _pack_lanes((q & 15).astype(jnp.uint8), 4)
+    scale_ref[...] = scale[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def qsgd_pack_blocked(xb, u, bits=4, interpret=False):
+    """xb, u: (nb, block) f32 -> (packed uint8 (nb, block//2), scale f32
+    (nb,)).  ``bits <= 4`` so levels fit the [-8, 7] nibble losslessly."""
+    nb, block = xb.shape
+    assert nb % ROWS == 0 and block % 2 == 0, (nb, block)
+    assert 2 <= bits <= 4, bits
+    levels = 2 ** (bits - 1) - 1
+    grid = (nb // ROWS,)
+    return pl.pallas_call(
+        functools.partial(_qsgd_pack_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS, block // 2), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb, u)
+
+
+def _pack_only_kernel(c_ref, p_ref, *, bits):
+    mask = (1 << bits) - 1
+    p_ref[...] = _pack_lanes((c_ref[...] & mask).astype(jnp.uint8), bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def pack_codes_blocked(cb, bits=2, interpret=False):
+    """int8 codes (nb, block) -> packed uint8 (nb, block*bits//8)."""
+    nb, block = cb.shape
+    per = 8 // bits
+    assert nb % ROWS == 0 and block % per == 0 and bits in (2, 4)
+    return pl.pallas_call(
+        functools.partial(_pack_only_kernel, bits=bits),
+        grid=(nb // ROWS,),
+        in_specs=[pl.BlockSpec((ROWS, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROWS, block // per), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, block // per), jnp.uint8)],
+        interpret=interpret,
+    )(cb)[0]
+
+
+def _unpack_only_kernel(p_ref, c_ref, *, bits):
+    c_ref[...] = _unpack_lanes(p_ref[...], bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def unpack_codes_blocked(pb, bits=2, interpret=False):
+    """packed uint8 (nb, pblock) -> int8 codes (nb, pblock*8//bits)."""
+    nb, pblock = pb.shape
+    per = 8 // bits
+    assert nb % ROWS == 0 and bits in (2, 4)
+    return pl.pallas_call(
+        functools.partial(_unpack_only_kernel, bits=bits),
+        grid=(nb // ROWS,),
+        in_specs=[pl.BlockSpec((ROWS, pblock), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((ROWS, pblock * per), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, pblock * per), jnp.int8)],
+        interpret=interpret,
+    )(pb)[0]

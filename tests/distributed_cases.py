@@ -398,6 +398,40 @@ def case_compressed_agg_collectives_in_hlo():
     print("case_compressed_agg_collectives_in_hlo OK")
 
 
+def case_packed_wire_collectives_in_hlo():
+    """The fused-wire claim (DESIGN.md §10): with wire_format='packed' the
+    client-axis collective gathers the bit-packed u8 buffer — no s8 or f32
+    code plane crosses the wire — and the staged twin still gathers s8."""
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    mesh = mesh2()
+
+    def hlo_for(comp, wire):
+        fl = FLConfig(algorithm="fedsgd", uplink_compressor=comp,
+                      wire_format=wire)
+        step = make_fl_train_step(model, fl, mesh, chunk=16)
+        state = jax.eval_shape(step.init_fn,
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+        batch = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in
+                 make_batch(cfg, step.n_clients, 2, 16,
+                            jax.random.PRNGKey(1)).items()}
+        fn = jax.jit(step.step_fn,
+                     in_shardings=(step.state_shardings,
+                                   step.batch_sharding_fn(batch)))
+        return fn.lower(state, batch).compile().as_text()
+
+    packed = hlo_for("ternary", "packed")
+    staged = hlo_for("ternary", "staged")
+    assert any("u8[" in l and "all-gather" in l for l in packed.splitlines()), \
+        "packed payload must be all-gathered as u8"
+    assert not any("s8[" in l and "all-gather" in l
+                   for l in packed.splitlines()), \
+        "no staged s8 code plane may cross the wire when packed"
+    assert any("s8[" in l and "all-gather" in l
+               for l in staged.splitlines())
+    print("case_packed_wire_collectives_in_hlo OK")
+
+
 def case_population_star_bitexact():
     """Degenerate ClientPopulation contract on the STAR topology (mesh
     client axes, shard_map wire): with cohort == C and capacity >= C the

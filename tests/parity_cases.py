@@ -87,7 +87,26 @@ WRAPPER_CASES = [
          kw=dict(fraction=0.02), sizes=(3001, 5000)),
 ]
 
-ALL_CASES = STAGE_CASES + CHAIN_CASES + WRAPPER_CASES
+# --- packed wire formats ("@fused", DESIGN.md §10) -------------------------
+# The packed payload bytes must be BIT-equal across backends (the fused
+# pack kernels emit exactly wire_format.pack2/pack4 of the staged codes) —
+# test_backend_parity's integer-dtype comparison enforces that on the
+# payloads via comm_state/decode; the dedicated round-trip tests in
+# test_kernel_parity.py cover the raw byte streams. mu partial sums keep
+# the bounded-ULP class of their staged twins.
+FUSED_CASES = [
+    case("ternary_fused", "ternary@fused", exact=False, tol=1e-5),
+    case("qsgd4_fused", "qsgd:4@fused"),
+    case("qsgd2_fused", "qsgd:2@fused"),
+    case("stc_fused", "stc:0.1@fused", exact=False, tol=1e-5),
+    case("topk_qsgd4_fused", "topk:0.05>>qsgd:4@fused"),
+    case("topk_ternary_fused", "topk:0.1>>ternary@fused", exact=False,
+         tol=1e-5),
+    case("ef_stc_fused", "stc:0.1@fused", wrapper="ef", exact=False,
+         tol=1e-5, rounds=3),
+]
+
+ALL_CASES = STAGE_CASES + CHAIN_CASES + WRAPPER_CASES + FUSED_CASES
 
 
 def build(c, backend):

@@ -19,8 +19,9 @@ from repro.compress.api import make_compressor
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ["README.md", "DESIGN.md", "EXPERIMENTS.md"]
 
-# one pipeline stage: name[:num[,num...]][@backend]
-_STAGE = r"[a-z][a-z0-9_]*(?::[0-9]+(?:\.[0-9]+)?(?:,[0-9]+(?:\.[0-9]+)?)*)?(?:@[a-z]+)?"
+# one pipeline stage: name[:num[,num...]][@suffix]* — suffixes stack
+# (backend @jax/@kernel and wire format @fused, DESIGN.md §3/§10)
+_STAGE = r"[a-z][a-z0-9_]*(?::[0-9]+(?:\.[0-9]+)?(?:,[0-9]+(?:\.[0-9]+)?)*)?(?:@[a-z]+)*"
 # a lintable spec: either a chain (>= one ">>") or a single @-suffixed stage
 _SPEC = re.compile(rf"^(?:{_STAGE}(?:>>{_STAGE})+|{_STAGE}@[a-z]+(?:>>{_STAGE})*)$")
 # candidates live in double quotes or backtick code spans

@@ -167,6 +167,18 @@ def test_stc_ternarize_accepts_traced_fraction():
     # annealing down transmits fewer coordinates
     code3, _ = annealed(jnp.float32(0.01))
     assert int((code3 != 0).sum()) < int((code != 0).sum())
+    # max_fraction bounds the top_k prefix (the DGC schedule's static
+    # round-0 fraction) without changing the result: bit-identical codes
+    # for every traced fraction at or below the bound
+    @jax.jit
+    def bounded(frac):
+        return ops.stc_ternarize(x, frac, block=2048, max_fraction=0.05)
+
+    for f in (0.05, 0.03, 0.01):
+        cb, mb = bounded(jnp.float32(f))
+        cu, mu_u = annealed(jnp.float32(f))
+        np.testing.assert_array_equal(np.asarray(cb), np.asarray(cu))
+        np.testing.assert_allclose(float(mb), float(mu_u), rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------
@@ -230,3 +242,205 @@ def test_ledger_terms_identical_across_backends():
         t_ker, _, _ = ledger_terms(model, FLConfig(uplink_compressor=spec,
                                                    backend="kernel"))
         assert t_jax == t_ker, spec
+
+
+# ---------------------------------------------------------------------------
+# Packed wire formats (DESIGN.md §10): pack/unpack round-trips, the
+# ledger == payload-bytes invariant, fused-vs-staged equivalence, grammar
+# ---------------------------------------------------------------------------
+
+from repro.compress.wire_format import (pack2, pack4, payload_nbytes,
+                                        unpack2, unpack4)
+from repro.kernels import bitpack
+
+# every spec that can ship packed (the "@fused" surface); qsgd bits > 4 and
+# the index/sketch/sign stages have no packed form and must stay staged
+PACKABLE_SPECS = ("ternary@fused", "qsgd:4@fused", "qsgd:2@fused",
+                  "stc:0.1@fused", "topk:0.05>>qsgd:4@fused",
+                  "topk:0.1>>ternary@fused", "stc@fused")
+
+
+@fuzz(_st(lambda: st.integers(1, 20_000)),
+      _st(lambda: st.sampled_from([2, 4])),
+      fallback=[(1, 2), (3, 2), (4, 2), (100, 4), (3001, 2), (5000, 4),
+                (8 * 2048, 2), (8 * 2048, 4)])
+def test_pack_unpack_roundtrip_bitexact(n, bits):
+    """pack2/pack4 are lossless on their code range and the tail byte's
+    unused fields are zero (pad codes never leak onto the wire)."""
+    lo, hi = (-1, 1) if bits == 2 else (-8, 7)
+    codes = jax.random.randint(jax.random.PRNGKey(n * 8 + bits), (n,),
+                               lo, hi + 1, dtype=jnp.int8)
+    pack, unpack, per = (pack2, unpack2, 4) if bits == 2 else \
+        (pack4, unpack4, 2)
+    packed = pack(codes)
+    assert packed.dtype == jnp.uint8 and packed.shape == (-(-n // per),)
+    np.testing.assert_array_equal(np.asarray(unpack(packed, n)),
+                                  np.asarray(codes))
+    if n % per:  # tail fields beyond n must pack to zero bits
+        tail = int(np.asarray(packed)[-1]) >> (bits * (n % per))
+        assert tail == 0
+
+
+@fuzz(_st(lambda: st.integers(1, 20_000)),
+      _st(lambda: st.sampled_from([2, 4])),
+      fallback=[(1, 2), (100, 4), (2048, 2), (3001, 4), (5000, 2),
+                (8 * 2048, 4)])
+def test_pallas_pack_kernels_match_flat_packing(n, bits):
+    """The Pallas pack/unpack kernels, flattened and sliced to the logical
+    length, emit BIT-identical bytes to the pure flat packing — the property
+    that makes the fused payloads interchangeable across backends."""
+    lo, hi = (-1, 1) if bits == 2 else (-8, 7)
+    codes = jax.random.randint(jax.random.PRNGKey(n * 4 + bits), (n,),
+                               lo, hi + 1, dtype=jnp.int8)
+    block = 2048
+    cb, _ = ops._to_blocked(codes.astype(jnp.float32), block)
+    cb = cb.astype(jnp.int8)
+    per = 8 // bits
+    packed_k = bitpack.pack_codes_blocked(cb, bits, interpret=True)
+    flat_k = packed_k.reshape(-1)[:-(-n // per)]
+    flat_p = (pack2 if bits == 2 else pack4)(codes)
+    np.testing.assert_array_equal(np.asarray(flat_k), np.asarray(flat_p))
+    # kernel unpack inverts kernel pack on the blocked layout
+    back = bitpack.unpack_codes_blocked(packed_k, bits, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back.reshape(-1)[:n]),
+                                  np.asarray(codes))
+
+
+@fuzz(_st(lambda: st.sampled_from(PACKABLE_SPECS)),
+      _st(lambda: st.integers(8, 40_000)),
+      fallback=[(s, n) for s in PACKABLE_SPECS for n in (100, 5000)])
+def test_packed_payload_bytes_equal_ledger(spec, n):
+    """THE tentpole invariant: for every packable spec the bytes the
+    aggregation collective actually gathers (payload_nbytes via eval_shape)
+    equal the ledger's wire_bits/8 exactly, on both backends — and packing
+    strictly shrinks the wire vs the staged twin."""
+    staged = make_compressor(spec.replace("@fused", ""))
+    for backend in ("jax", "kernel"):
+        pipe = make_compressor(spec, backend=backend)
+        assert 8 * payload_nbytes(pipe, n) == pipe.wire_bits(n), \
+            (spec, backend, n)
+        # packing strictly shrinks the wire vs the staged twin — except
+        # stc@fused at the default fraction 0.01, where the dense 2-bit
+        # sign plane (2n bits) loses to the staged index list (~40*k bits);
+        # the dense plane wins exactly when fraction > 2/40 (DESIGN.md §10)
+        if spec != "stc@fused":
+            assert pipe.wire_bits(n) < staged.wire_bits(n), \
+                (spec, backend, n)
+
+
+def test_fused_stc_matches_staged_pipeline():
+    """stc@fused (single threshold-ternarize pass) reconstructs the same
+    update as the staged topk>>ternary pipeline: identical support, values
+    within mu's reduction-order tolerance, strictly fewer wire bits."""
+    n = 5000
+    x = jax.random.normal(jax.random.PRNGKey(3), (n,)) * 2.0
+    staged = make_compressor("stc:0.1")
+    fused = make_compressor("stc:0.1@fused")
+    pay_s, _ = staged.encode(staged.init((n,)), jax.random.PRNGKey(0), x)
+    pay_f, _ = fused.encode(fused.init((n,)), jax.random.PRNGKey(0), x)
+    y_s = np.asarray(staged.decode(pay_s, n))
+    y_f = np.asarray(fused.decode(pay_f, n))
+    np.testing.assert_array_equal(y_s == 0, y_f == 0)
+    np.testing.assert_allclose(y_s, y_f, rtol=1e-5, atol=1e-5)
+    assert fused.wire_bits(n) < staged.wire_bits(n)
+
+
+def test_fused_names_tagged():
+    assert make_compressor("ternary@fused").name == "ternary@fused"
+    assert make_compressor("stc:0.1@fused").name == "stc0.1@fused"
+    assert make_compressor("qsgd:4@fused@kernel").name == "qsgd4@kernel@fused"
+    assert make_compressor("topk:0.05>>qsgd:4@fused").name == \
+        "topk0.05>>qsgd4@fused"
+
+
+def test_explicit_fused_on_unpackable_stage_fails():
+    for spec in ("topk:0.05@fused", "qsgd:8@fused", "sbc:0.01@fused",
+                 "hsq@fused", "sketch@fused"):
+        with pytest.raises(ValueError, match="no packed wire format"):
+            make_compressor(spec)
+    with pytest.raises(ValueError, match="unknown wire format"):
+        make_compressor("ternary", wire_format="zipped")
+
+
+def test_global_wire_format_degrades_gracefully():
+    """FLConfig.wire_format='packed' packs every packable stage and leaves
+    the rest staged (same graceful-degrade contract as backend='kernel')."""
+    assert make_compressor("qsgd:8", wire_format="packed").name == "qsgd8"
+    assert make_compressor("qsgd:4", wire_format="packed").name == \
+        "qsgd4@fused"
+    assert make_compressor("stc", wire_format="packed").name == \
+        "stc0.01@fused"
+    assert make_compressor("hsq", wire_format="packed").name == "hsq"
+    # staged remains the default everywhere
+    assert make_compressor("stc").name == "topk0.01>>ternary"
+
+
+def test_engine_wire_format_packed_halves_uplink():
+    """FLConfig.wire_format='packed' through the sim engine: the decoded
+    aggregate matches staged within mu tolerance and the ledger's wire
+    bytes drop by ~2x (int8 signs -> 2-bit packed, per-leaf +32-bit mu)."""
+    from repro.configs.registry import get_arch
+    from repro.core.engine import run_rounds
+    from repro.core.simulate import make_sim_step
+    from repro.core.types import FLConfig
+    from repro.data.synthetic import FedDataConfig, sample_round
+    from repro.models.model import Model
+
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    data = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=4,
+                         seq_len=32, batch_per_client=2, heterogeneity=1.5)
+
+    def run(wire):
+        fl = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.2,
+                      uplink_compressor="stc:0.1", wire_format=wire)
+        sim = make_sim_step(model, fl, data.num_clients, chunk=32)
+        state = sim.init_fn(jax.random.PRNGKey(0))
+        return run_rounds(
+            sim.engine, state,
+            lambda r: sample_round(data, jax.random.fold_in(
+                jax.random.PRNGKey(1), r)), 2, chunk=2)
+
+    s_stg, m_stg = run("staged")
+    s_pkd, m_pkd = run("packed")
+    for a, b in zip(jax.tree.leaves(s_stg.params),
+                    jax.tree.leaves(s_pkd.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    wire_stg = float(np.asarray(m_stg["ledger"].uplink_wire)[-1])
+    wire_pkd = float(np.asarray(m_pkd["ledger"].uplink_wire)[-1])
+    assert wire_pkd < 0.6 * wire_stg, (wire_pkd, wire_stg)
+
+
+def test_async_engine_moves_packed_payloads():
+    """The async dispatch path ships the packed buffers unchanged: a FedBuff
+    run with wire_format='packed' stays finite and its per-event ledger
+    reports the packed byte counts."""
+    from repro.configs.registry import get_arch
+    from repro.core.engine import Topology, make_round_engine, run_rounds
+    from repro.core.types import FLConfig
+    from repro.data.synthetic import FedDataConfig, sample_round
+    from repro.models.model import Model
+
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    data = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=4,
+                         seq_len=32, batch_per_client=2, heterogeneity=1.5)
+
+    def data_fn(r):
+        return sample_round(data, jax.random.fold_in(jax.random.PRNGKey(1), r))
+
+    def run(wire):
+        fl = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.2,
+                      uplink_compressor="stc:0.1", wire_format=wire)
+        eng = make_round_engine(model, fl, Topology.async_(4, buffer_size=2),
+                                chunk=32, data_fn=data_fn)
+        return run_rounds(eng, eng.init_fn(jax.random.PRNGKey(0)),
+                          data_fn, 8, chunk=4)
+
+    _, m_stg = run("staged")
+    _, m_pkd = run("packed")
+    assert np.isfinite(np.asarray(m_pkd["loss"])).all()
+    wire_stg = float(np.asarray(m_stg["ledger"].uplink_wire)[-1])
+    wire_pkd = float(np.asarray(m_pkd["ledger"].uplink_wire)[-1])
+    assert 0 < wire_pkd < 0.6 * wire_stg, (wire_pkd, wire_stg)
