@@ -3,7 +3,8 @@ from repro.compress.api import (CommTransform, Compressor, Identity,
 from repro.compress.pipeline import (chain, error_feedback,
                                      momentum_correction)
 from repro.compress import quantization, sparsification, sketch  # registers
+from repro.compress.secure_agg import DPNoise, SecAgg  # privacy stages (§11)
 
 __all__ = ["CommTransform", "Compressor", "Identity", "chain",
            "error_feedback", "momentum_correction", "make_compressor",
-           "make_pipeline"]
+           "make_pipeline", "SecAgg", "DPNoise"]

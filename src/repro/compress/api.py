@@ -121,6 +121,13 @@ class CommTransform:
     def entropy_bits(self, n: int) -> float:
         return self.meta_entropy_bits(n) + 32.0 * self.carrier_len(n)
 
+    # --- privacy accounting (DESIGN.md §11) --------------------------------
+    def dp_rho_per_round(self) -> float:
+        """zCDP rho this pipeline spends per client per round (0 unless a
+        ``dpnoise`` stage is present).  Additive under composition, so the
+        ledger accumulates it exactly like bytes."""
+        return 0.0
+
     # --- stateless conveniences (the legacy ``Compressor`` surface) --------
     def compress(self, rng: jax.Array, x: jax.Array) -> Payload:
         payload, _ = self.encode(self.init(x.shape), rng, x)
@@ -175,6 +182,12 @@ class Identity(CommTransform):
 # ``backend`` kwarg sets the default for every stage of the spec (stages
 # without a kernel path keep the pure-JAX encode, but an *explicit*
 # "@kernel" on such a stage fails loudly).
+#
+# Privacy stages (DESIGN.md §11) ride the same grammar with wrapping
+# semantics: "qsgd:4>>secagg" masks the qsgd pipeline's integer code
+# planes, "topk:0.05>>qsgd:4>>dpnoise:0.8" adds clipped Gaussian noise at
+# the wire boundary.  They wrap everything to their left; a non-privacy
+# stage after one is an error.
 #
 # "@fused" selects the PACKED wire format (DESIGN.md §10): the payload is
 # the bit-packed int codes (2-bit ternary, nibble qsgd:<=4) instead of the
@@ -276,8 +289,25 @@ def make_compressor(spec: Optional[str], **kw) -> CommTransform:
     if spec in ("none", None, ""):
         return Identity()
     from repro.compress.pipeline import chain   # late import (cycle)
-    stages = [_make_stage(tok, **kw) for tok in spec.split(">>")]
-    return chain(*stages)
+    from repro.compress import secure_agg       # late import (cycle)
+    # privacy stages (secagg, dpnoise) are *wrapping* transforms, not
+    # carrier-chained stages: each one wraps the whole pipeline to its left
+    # ("qsgd:4>>secagg" = SecAgg over the qsgd pipeline), and nothing
+    # non-private may follow — the wire boundary is the outermost layer.
+    pipe, buf = None, []
+    for tok in spec.split(">>"):
+        head = tok.strip().split("@", 1)[0].split(":", 1)[0].strip()
+        if head in secure_agg.PRIVACY_STAGES:
+            inner = chain(*buf) if pipe is None else pipe
+            pipe, buf = secure_agg.make_privacy_stage(tok, inner, **kw), []
+        elif pipe is not None:
+            raise ValueError(
+                f"stage {tok.strip()!r} cannot follow a privacy stage — "
+                f"secagg/dpnoise wrap everything before them; put carrier "
+                f"stages first (e.g. 'topk:0.05>>qsgd:4>>secagg')")
+        else:
+            buf.append(_make_stage(tok, **kw))
+    return pipe if pipe is not None else chain(*buf)
 
 
 # ``make_pipeline`` is the forward-looking name; both resolve identically.

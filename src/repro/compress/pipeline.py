@@ -99,6 +99,9 @@ class Chain(CommTransform):
     def meta_bits(self, n):
         return sum(s.meta_bits(m) for s, m in zip(self.stages, self._lens(n)))
 
+    def dp_rho_per_round(self):
+        return sum(s.dp_rho_per_round() for s in self.stages)
+
     def meta_entropy_bits(self, n):
         # carrier-conditional composition (DESIGN.md §1): each stage's
         # entropy estimate is conditioned on the *distribution* of the
@@ -150,6 +153,9 @@ class _Wrapper(CommTransform):
 
     def meta_entropy_bits(self, n):
         return self.inner.entropy_bits(n)
+
+    def dp_rho_per_round(self):
+        return self.inner.dp_rho_per_round()
 
 
 class ErrorFeedback(_Wrapper):

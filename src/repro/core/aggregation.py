@@ -29,6 +29,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map
 from repro.compress.api import CommTransform
+from repro.compress.secure_agg import MASK_TAG, has_mask_ctx, inject_mask_ctx
 
 PyTree = Any
 
@@ -137,6 +138,13 @@ def make_aggregator(mesh: Mesh, param_specs: PyTree, pipe: CommTransform,
             else:
                 st = (jax.tree.map(lambda a: a[0], comm_state[li])
                       if stateful else pipe.init((n,)))
+                if has_mask_ctx(pipe):
+                    # secagg context for the star wire: the mask ring spans
+                    # the gathered client axis — idx is this device's
+                    # client_index, cohort the full C the all_gather sees
+                    mkey = jax.random.fold_in(
+                        jax.random.fold_in(rng, MASK_TAG), li)
+                    st = inject_mask_ctx(st, mkey, idx, C)
                 payload, new_st = pipe.encode(st, r, flat)
                 if axes:
                     # one fused leading dim of size C, ordered to match

@@ -379,6 +379,10 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
             downlink_dense=ctx["n_down"] * jnp.float32(terms["dense"]),
             virtual_time=ctx["clock"],
         )
+        if terms.get("dp_rho", 0.0):
+            # one client upload per event -> one round of zCDP spend
+            ctx["ledger"] = dataclasses.replace(
+                ctx["ledger"], dp_rho=jnp.float32(terms["dp_rho"]))
         return ctx
 
     def hop_finalize(ctx):

@@ -44,6 +44,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compress.api import Identity, make_compressor
 from repro.compress.pipeline import error_feedback, momentum_correction
+from repro.compress.secure_agg import (DPNoise, MASK_TAG, SecAgg,
+                                       bind_n_leaves, has_mask_ctx,
+                                       inject_mask_ctx)
 from repro.core import aggregation, selection as sel, server_opt
 from repro.core.aggregation import comm_state_init, comm_state_specs
 from repro.core.compat import shard_map
@@ -310,12 +313,27 @@ def uplink_pipeline(fl: FLConfig):
                 "dgc_warmup_rounds needs a fraction-kwarg-driven uplink "
                 f"spec (e.g. 'topk' + topk_fraction); "
                 f"{fl.uplink_compressor!r} ignores the warm-up widening")
+    up = _apply_privacy(fl, up)
     if fl.dgc_momentum > 0.0 and not up.is_identity:
         up = momentum_correction(up, fl.dgc_momentum,
                                  warmup_rounds=warmup,
                                  final_fraction=fl.topk_fraction)
     elif up.biased and fl.error_feedback:
         up = error_feedback(up)
+    return up
+
+
+def _apply_privacy(fl: FLConfig, up):
+    """FLConfig privacy knobs as spec-suffix equivalents (DESIGN.md §11):
+    dpnoise at the wire boundary first, secagg masking outermost (so the
+    noised update is what gets quantized and masked). EF/DGC wrap outside
+    privacy — residuals are computed from the *unmasked* decode, so they
+    match the unmasked run bit-for-bit."""
+    if fl.dp_sigma > 0.0 or fl.dp_clip > 0.0:
+        clip = fl.dp_clip if fl.dp_clip > 0.0 else float("inf")
+        up = DPNoise(up, fl.dp_sigma, clip)
+    if fl.secure_agg and not up.is_identity:
+        up = SecAgg(up)   # raises with the carrier rule for float pipelines
     return up
 
 
@@ -332,6 +350,10 @@ def ledger_terms(model: Model, fl: FLConfig):
     down = make_compressor(fl.downlink_compressor, block=fl.qsgd_block,
                            backend=fl.backend, wire_format=fl.wire_format)
     sizes = _param_sizes(model)
+    # dpnoise splits its joint L2 clip budget across this model's leaves
+    # (clip/sqrt(L) each) — binding L here keeps the billed rho=0.5/sigma^2
+    # equal to what encode actually spends (DESIGN.md §11)
+    bind_n_leaves(up, len(sizes))
     # SCAFFOLD ships control variates, FedDANE ships a gradient round: 2x
     scaff = 2.0 if fl.algorithm in ("scaffold", "feddane") else 1.0
     t = {
@@ -339,18 +361,25 @@ def ledger_terms(model: Model, fl: FLConfig):
         "up_entropy": scaff * sum(up.entropy_bits(n) for n in sizes) / 8.0,
         "down_wire": sum(down.wire_bits(n) for n in sizes) / 8.0,
         "dense": sum(32.0 * n for n in sizes) / 8.0,
+        # zCDP spent per selected client this round (0 unless dpnoise is in
+        # the uplink); rides the ledger like bytes (DESIGN.md §11)
+        "dp_rho": up.dp_rho_per_round(),
     }
     return t, up, down
 
 
 def _make_ledger(terms: dict, n_sel) -> CommLedger:
-    return CommLedger(
+    led = CommLedger(
         uplink_wire=n_sel * terms["up_wire"],
         uplink_entropy=n_sel * terms["up_entropy"],
         downlink_wire=n_sel * terms["down_wire"],
         uplink_dense=n_sel * terms["dense"],
         downlink_dense=n_sel * terms["dense"],
     )
+    if terms.get("dp_rho", 0.0):
+        led = dataclasses.replace(led, dp_rho=n_sel * jnp.float32(
+            terms["dp_rho"]))
+    return led
 
 
 # ---------------------------------------------------------------------------
@@ -464,6 +493,7 @@ def make_dispatch(model: Model, fl: FLConfig, up, down, C: int,
     """Build the shared dispatch body for one (model, fl) binding over ``C``
     vmapped clients with uplink pipeline ``up`` / downlink ``down``."""
     stateful = up.stateful
+    masked = has_mask_ctx(up)
 
     def downlink(params, k_down):
         if down.is_identity:
@@ -494,10 +524,26 @@ def make_dispatch(model: Model, fl: FLConfig, up, down, C: int,
             flat = leaf.reshape(C, -1).astype(jnp.float32)
             rs = jax.vmap(lambda r: jax.random.fold_in(r, li))(rngs_up)
             if stateful:
-                def one(x, r, st):
-                    payload, nst = up.encode(st, r, x)
-                    return up.decode(payload, x.shape[0]), nst
-                dec, nst = jax.vmap(one)(flat, rs, comm_state[li])
+                if masked:
+                    # secagg context for this hop: a round/leaf-shared mask
+                    # key, the client's vmap lane as ring index, cohort C.
+                    # Injected fresh each dispatch, so async re-dispatches
+                    # (flush) re-key their masks with their own k_up.
+                    mkey = jax.random.fold_in(
+                        jax.random.fold_in(k_up, MASK_TAG), li)
+
+                    def one(x, r, st, i, mkey=mkey):
+                        st = inject_mask_ctx(st, mkey, i, C)
+                        payload, nst = up.encode(st, r, x)
+                        return up.decode(payload, x.shape[0]), nst
+                    dec, nst = jax.vmap(one)(
+                        flat, rs, comm_state[li],
+                        jnp.arange(C, dtype=jnp.int32))
+                else:
+                    def one(x, r, st):
+                        payload, nst = up.encode(st, r, x)
+                        return up.decode(payload, x.shape[0]), nst
+                    dec, nst = jax.vmap(one)(flat, rs, comm_state[li])
                 st_rows.append(nst)
             else:
                 def one(x, r):
@@ -982,6 +1028,7 @@ def _build_hier(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
     stateful = up.stateful
 
     nparams = _param_sizes(model)
+    bind_n_leaves(up, len(nparams))   # dpnoise: joint clip over all leaves
     terms = {
         "edge_wire": sum(up.wire_bits(n) for n in nparams) / 8.0 * Ce * G,
         "cloud_wire": sum(pod_comp.wire_bits(n) for n in nparams) / 8.0 * G,
@@ -1014,6 +1061,12 @@ def _build_hier(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
                 else:
                     st = (jax.tree.map(lambda a: a[0, 0], comm[li])
                           if stateful else up.init(flat.shape))
+                    if has_mask_ctx(up):
+                        # per-pod mask ring over the "data" axis (the edge
+                        # cohort): pods mask independently, cohort = Ce
+                        mkey = jax.random.fold_in(jax.random.fold_in(
+                            jax.random.fold_in(rng, MASK_TAG), li), gi)
+                        st = inject_mask_ctx(st, mkey, ci, Ce)
                     payload, new_st = up.encode(st, r, flat)
                     gath = jax.lax.all_gather(payload, "data")
                     dec = jax.vmap(lambda q: up.decode(q, flat.shape[0]))(gath)
@@ -1126,6 +1179,10 @@ def _build_hier(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
                 downlink_wire=jnp.float32(0.0),
                 uplink_dense=jnp.float32(terms["dense"]),
                 downlink_dense=jnp.float32(0.0))
+            rho = up.dp_rho_per_round()
+            if rho:
+                ctx["ledger"] = dataclasses.replace(
+                    ctx["ledger"], dp_rho=jnp.float32(rho * Ce * G))
             return ctx
 
         def hop_finalize(ctx):
@@ -1215,6 +1272,7 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
                            block=fl.qsgd_block, rows=fl.sketch_rows,
                            cols=fl.sketch_cols, backend=fl.backend,
                            wire_format=fl.wire_format)
+    comp = _apply_privacy(fl, comp)
     if comp.biased and fl.error_feedback:
         comp = error_feedback(comp)
     stateful = comp.stateful
@@ -1238,6 +1296,7 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
     self_w_vec = jnp.asarray(self_w_vec, jnp.float32)
 
     nparams = _param_sizes(model)
+    bind_n_leaves(comp, len(nparams))  # dpnoise: joint clip over all leaves
     payload_bytes = sum(comp.wire_bits(n) for n in nparams) / 8.0
     n_edges = sum(len(edges) for edges, _ in perms)
     terms = {
@@ -1258,6 +1317,16 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
                 r = jax.random.fold_in(rng, li)
                 st = (jax.tree.map(lambda a: a[0], comm[li])
                       if stateful else comp.init(flat.shape))
+                if has_mask_ctx(comp):
+                    # gossip: the ring spans all C nodes. Cancellation only
+                    # holds for sums over the full cohort, so masked gossip
+                    # is exact when the mixing row covers every node (all-to
+                    # -all matchings); sparse matchings decode per-edge via
+                    # the payload ctx, which stays exact per client.
+                    mkey = jax.random.fold_in(
+                        jax.random.fold_in(rng, MASK_TAG), li)
+                    st = inject_mask_ctx(
+                        st, mkey, jax.lax.axis_index("data"), C)
                 payload, new_st = comp.encode(st, r, flat)
                 n = flat.shape[0]
                 mixed = self_w * flat
@@ -1315,6 +1384,11 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
             downlink_wire=jnp.float32(0.0),
             uplink_dense=jnp.float32(terms["dense"]),
             downlink_dense=jnp.float32(0.0))
+        rho = comp.dp_rho_per_round()
+        if rho:
+            # every node releases one noised payload per round
+            ctx["ledger"] = dataclasses.replace(
+                ctx["ledger"], dp_rho=jnp.float32(rho * C))
         return ctx
 
     def hop_finalize(ctx):

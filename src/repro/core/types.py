@@ -200,6 +200,15 @@ class FLConfig:
     sketch_cols: int = 4096
     qsgd_block: int = 2048            # per-block scale granularity
     error_feedback: bool = True       # wrap biased pipelines in error_feedback()
+    # §Privacy (DESIGN.md §11) — the privacy-compatible wire stack. These
+    # wrap the uplink spec exactly like the ">>secagg" / ">>dpnoise:s" spec
+    # suffixes: dpnoise first (clip + Gaussian at the wire boundary), then
+    # secagg (pairwise modular masks over the integer code planes; needs a
+    # quantizing uplink spec), then EF/DGC outermost.
+    secure_agg: bool = False          # mask the uplink's integer code planes
+    dp_sigma: float = 0.0             # Gaussian noise multiplier (0 = off)
+    dp_clip: float = 0.0              # per-leaf L2 clip (0 = no clipping;
+                                      # required > 0 when dp_sigma > 0)
     dgc_momentum: float = 0.0         # >0: wrap in momentum_correction() (DGC)
     dgc_warmup_rounds: int = 0        # >0: DGC warm-up — the effective top-k
                                       # fraction anneals exponentially from
@@ -308,6 +317,13 @@ class CommLedger:
                                       # synchronous topologies — lets
                                       # bytes-to-target and time-to-target
                                       # read off the same ledger stack
+    dp_rho: Any = None                # zCDP privacy spend this round (f32,
+                                      # summed over participating clients);
+                                      # None unless a dpnoise stage is in the
+                                      # uplink.  zCDP composes additively, so
+                                      # the ledger accumulation that sums
+                                      # bytes sums the privacy budget too
+                                      # (DESIGN.md §11)
 
     @staticmethod
     def zero() -> "CommLedger":

@@ -466,6 +466,91 @@ def case_population_star_bitexact():
     print("case_population_star_bitexact OK")
 
 
+def case_secagg_masked_bitexact():
+    """Masked == unmasked bit-exactly on the multi-device wires (DESIGN.md
+    §11): the star shard_map wire (an all_gather of *masked* integer
+    payloads — including a packed @fused chain where the masked uint8 planes
+    stay uint8 on the collective), the hier edge hop (per-pod mask rings
+    over the "data" axis) and the gossip mix (per-edge ppermute of masked
+    payloads).  Params, ctx-stripped comm_state and ledger wire bytes must
+    all match the unmasked run."""
+    from repro.compress.secure_agg import drop_mask_ctx
+    from repro.core.engine import Topology, make_round_engine, run_rounds
+
+    cfg = tiny_cfg()
+    model = Model(cfg)
+
+    def _eq(tag, a, b):
+        la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+        assert len(la) == len(lb), tag
+        for x, y in zip(la, lb):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), tag
+
+    # --- star shard_map wire ------------------------------------------------
+    mesh = mesh2()
+
+    def data_fn(r):
+        return make_batch(cfg, 4, 2, 16,
+                          jax.random.fold_in(jax.random.PRNGKey(1), r))
+
+    def star_run(spec):
+        fl = FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                      uplink_compressor=spec)
+        e = make_round_engine(model, fl, Topology.star(), mesh=mesh,
+                              chunk=16)
+        st = e.init_fn(jax.random.PRNGKey(0))
+        st, ms = run_rounds(e, st, data_fn, 3, chunk=1, donate=False)
+        return st, ms
+
+    for base in ("topk:0.25>>qsgd:8", "ternary@fused"):
+        sb, mb = star_run(base)
+        sm, mm = star_run(base + ">>secagg")
+        _eq(f"star params {base}", sb.params, sm.params)
+        _eq(f"star comm {base}", sb.comm_state,
+            drop_mask_ctx(sm.comm_state))
+        _eq(f"star ledger {base}", mb["ledger"].uplink_wire,
+            mm["ledger"].uplink_wire)
+
+    # --- hier edge hop ------------------------------------------------------
+    m3 = mesh3()
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 2, 2, 16), 0, 96)
+    hbatch = {"tokens": t, "labels": t, "mask": jnp.ones((2, 2, 2, 16))}
+
+    def hier_run(spec):
+        fl = FLConfig(algorithm="fedavg", local_steps=2,
+                      uplink_compressor=spec, pod_compressor="qsgd8",
+                      hierarchical=True, sync_every=2)
+        h = make_hier_fl_train_step(model, fl, m3, chunk=16)
+        state = h.init_fn(jax.random.PRNGKey(0))
+        se, scl = jax.jit(h.step_edge), jax.jit(h.step_cloud)
+        for i in range(3):
+            state, _ = (scl if (i + 1) % 2 == 0 else se)(state, hbatch)
+        return state
+
+    hb = hier_run("qsgd8")
+    hm = hier_run("qsgd8>>secagg")
+    _eq("hier params", hb.params, hm.params)
+    _eq("hier comm", hb.comm_state, drop_mask_ctx(hm.comm_state))
+
+    # --- gossip mix ---------------------------------------------------------
+    def gossip_run(spec):
+        flg = FLConfig(algorithm="fedavg", local_steps=1,
+                       uplink_compressor=spec, local_lr=0.01)
+        g = make_gossip_step(model, flg, m3, chunk=16)
+        gs = g.init_fn(jax.random.PRNGKey(0))
+        gstep = jax.jit(g.step_fn)
+        gb = {"tokens": t[0], "labels": t[0], "mask": jnp.ones((2, 2, 16))}
+        for _ in range(3):
+            gs, _ = gstep(gs, gb)
+        return gs
+
+    gb_ = gossip_run("qsgd8")
+    gm_ = gossip_run("qsgd8>>secagg")
+    _eq("gossip params", gb_.params, gm_.params)
+    _eq("gossip comm", gb_.comm_state, drop_mask_ctx(gm_.comm_state))
+    print("case_secagg_masked_bitexact OK")
+
+
 CASES = {k[5:]: v for k, v in list(globals().items())
          if k.startswith("case_")}
 

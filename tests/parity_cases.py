@@ -51,9 +51,10 @@ INPUTS = {"gaussian": gaussian, "hh": heavy_hitters}
 
 
 def case(name, spec, *, exact=True, tol=0.0, input="gaussian",
-         wrapper=None, rounds=1, kw=None, sizes=SIZES):
+         wrapper=None, rounds=1, kw=None, sizes=SIZES, base=None):
     return dict(name=name, spec=spec, exact=exact, tol=tol, input=input,
-                wrapper=wrapper, rounds=rounds, kw=kw or {}, sizes=sizes)
+                wrapper=wrapper, rounds=rounds, kw=kw or {}, sizes=sizes,
+                base=base)
 
 
 # --- every kernel-capable stage, standalone --------------------------------
@@ -106,7 +107,26 @@ FUSED_CASES = [
          tol=1e-5, rounds=3),
 ]
 
-ALL_CASES = STAGE_CASES + CHAIN_CASES + WRAPPER_CASES + FUSED_CASES
+# --- privacy stages (secagg masking / dpnoise, DESIGN.md §11) --------------
+# Each privacy case pairs a masked spec with its clear ``base`` spec: the
+# kernel-parity run exercises the masked pipeline through both backends
+# (ALL_CASES membership), and tests/test_secure_agg.py additionally runs
+# the masked-vs-base differential (bit-exact decode after mask removal,
+# identical ledger wire bytes).  dpnoise:0 with an inf clip is the proven
+# bit-exact no-op, so its masked-vs-base differential is also exact.
+PRIVACY_CASES = [
+    case("secagg_qsgd4", "qsgd:4>>secagg", base="qsgd:4"),
+    case("secagg_topk_qsgd", "topk:0.05>>qsgd:4>>secagg",
+         base="topk:0.05>>qsgd:4"),
+    case("secagg_ternary_fused", "ternary@fused>>secagg",
+         base="ternary@fused", exact=False, tol=1e-5),
+    case("secagg_ef_chain", "topk:0.05>>qsgd:8>>secagg",
+         base="topk:0.05>>qsgd:8", wrapper="ef", rounds=3),
+    case("secagg_qsgd2_fused", "qsgd:2@fused>>secagg", base="qsgd:2@fused"),
+]
+
+ALL_CASES = (STAGE_CASES + CHAIN_CASES + WRAPPER_CASES + FUSED_CASES
+             + PRIVACY_CASES)
 
 
 def build(c, backend):

@@ -1,0 +1,138 @@
+"""The claims registry (benchmarks/claims.py) is the single source of truth
+for every measured ``holds=`` claim: prose (EXPERIMENTS.md), emitted rows
+(benchmarks/run.py), and the committed BENCH_<pr>.json trajectory must all
+resolve against it.  Three ways a claim can exist, three cross-checks:
+
+  * quoted in EXPERIMENTS.md   -> must be registered (id + reproduce +
+    tolerance), so the prose cannot cite a claim nobody re-measures;
+  * emitted by benchmarks/run.py -> must be registered, so a new holds=
+    row cannot ship without a reproduce command (also enforced at runtime
+    by _check_trajectory before writing a BENCH json);
+  * recorded in BENCH_*.json   -> must be registered, so the trajectory
+    back-catalog stays re-checkable.
+"""
+import glob
+import importlib.util
+import json
+import os
+import re
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load(name, relpath):
+    path = os.path.join(ROOT, relpath)
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod        # dataclasses resolves cls.__module__
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def registry():
+    return _load("bench_claims", os.path.join("benchmarks", "claims.py"))
+
+
+# --- prose -> registry ------------------------------------------------------
+
+_QUOTED_CLAIM = re.compile(r"`([a-z0-9_.]+/claim_[a-z0-9_./*]+)`")
+
+
+def _experiments_claims():
+    with open(os.path.join(ROOT, "EXPERIMENTS.md")) as fh:
+        return sorted(set(_QUOTED_CLAIM.findall(fh.read())))
+
+
+def test_experiments_quotes_claims():
+    assert len(_experiments_claims()) >= 5, (
+        "claim-id extraction from EXPERIMENTS.md rotted")
+
+
+@pytest.mark.parametrize("name", _experiments_claims())
+def test_every_experiments_claim_is_registered(name, registry):
+    # `fused/claim_ledger_eq_hlo/*` cites the whole parametrised family
+    probe = name[:-2] if name.endswith("/*") else name
+    assert registry.lookup(probe) is not None, (
+        f"EXPERIMENTS.md cites {name!r} but benchmarks/claims.py has no "
+        f"Claim for it — register id + reproduce + tolerance")
+
+
+# --- emitted rows -> registry ----------------------------------------------
+
+def _runpy_claims():
+    with open(os.path.join(ROOT, "benchmarks", "run.py")) as fh:
+        src = fh.read()
+    out = set()
+    for m in re.finditer(r'emit\(f?"([a-z0-9_.]+/claim_[^"{]*)', src):
+        out.add(m.group(1).rstrip("/"))
+    return sorted(out)
+
+
+def test_runpy_emits_claims():
+    assert len(_runpy_claims()) >= 8
+
+
+@pytest.mark.parametrize("name", _runpy_claims())
+def test_every_emitted_claim_is_registered(name, registry):
+    assert registry.lookup(name) is not None, (
+        f"benchmarks/run.py emits {name!r} with no Claim entry in "
+        f"benchmarks/claims.py")
+
+
+# --- trajectory back-catalog -> registry ------------------------------------
+
+def _bench_json_claims():
+    out = []
+    for p in sorted(glob.glob(os.path.join(ROOT, "benchmarks",
+                                           "BENCH_*.json"))):
+        with open(p) as fh:
+            for c in json.load(fh).get("claims", []):
+                out.append(pytest.param(
+                    os.path.basename(p), c["name"],
+                    id=f"{os.path.basename(p)}:{c['name']}"))
+    return out
+
+
+@pytest.mark.parametrize("src,name", _bench_json_claims())
+def test_every_recorded_claim_is_registered(src, name, registry):
+    assert registry.lookup(name) is not None, (
+        f"{src} records claim {name!r} unknown to benchmarks/claims.py")
+
+
+# --- registry self-consistency ----------------------------------------------
+
+def test_registry_ids_unique(registry):
+    ids = [c.id for c in registry.REGISTRY]
+    assert len(ids) == len(set(ids))
+
+
+def test_registry_suites_exist(registry):
+    run = _load("benchmarks_run", os.path.join("benchmarks", "run.py"))
+    for c in registry.REGISTRY:
+        assert c.suite in run.BENCHES, (
+            f"{c.id}: suite {c.suite!r} is not a registered benchmark")
+        assert f"--only {c.suite}" in c.reproduce, (
+            f"{c.id}: reproduce command does not run its own suite")
+        assert c.tolerance and c.description
+
+
+def test_smoke_suites_cover_ci_recheck(registry):
+    # the claims-recheck CI job re-runs exactly these; privacy, scale and
+    # fused carry deterministic (bitwise / inequality) predicates that
+    # must stay smoke-checkable
+    suites = registry.smoke_suites()
+    for s in ("privacy", "scale", "fused"):
+        assert s in suites
+
+
+def test_lookup_resolves_family_rows(registry):
+    assert registry.lookup("fused/claim_ledger_eq_hlo/ternary") is not None
+    assert registry.lookup("fused/claim_packed_shrinks_wire/stc:0.1") \
+        is not None
+    assert registry.lookup("fused/claim_nonexistent") is None
+    assert registry.unregistered(["privacy/claim_masked_bitexact",
+                                  "bogus/claim_x"]) == ["bogus/claim_x"]

@@ -22,6 +22,7 @@ CASES = [
     "noniid_data_pipeline",
     "compressed_agg_collectives_in_hlo",
     "population_star_bitexact",
+    "secagg_masked_bitexact",
 ]
 
 

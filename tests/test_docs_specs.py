@@ -111,3 +111,38 @@ def test_doc_only_suite_is_registered(doc, suite):
     assert suite in _registered_suites(), (
         f"{doc} references benchmark suite {suite!r}; "
         f"registered: {sorted(_registered_suites())}")
+
+
+# ---------------------------------------------------------------------------
+# privacy grammar (DESIGN.md §11): EXPERIMENTS §Privacy quotes secagg /
+# dpnoise specs; they must build, and the unmaskable combination must fail
+# with an error that names the fix
+# ---------------------------------------------------------------------------
+
+def _privacy_section_specs():
+    with open(os.path.join(ROOT, "EXPERIMENTS.md")) as fh:
+        text = fh.read()
+    m = re.search(r"^## §Privacy.*?(?=^## |\Z)", text, re.M | re.S)
+    assert m, "EXPERIMENTS.md lost its §Privacy section"
+    return _extract(m.group(0))
+
+
+def test_experiments_privacy_section_quotes_privacy_specs():
+    """§Privacy must quote at least one secagg spec and one dpnoise spec —
+    the reproduce commands the section stands on — and each must build."""
+    specs = _privacy_section_specs()
+    assert any(">>secagg" in s for s in specs), specs
+    assert any("dpnoise:" in s for s in specs), specs
+    for spec in specs:
+        comp = make_compressor(spec, fraction=0.01)
+        assert comp.wire_bits(1 << 12) > 0 or comp.is_identity, spec
+
+
+def test_secagg_over_float_payload_names_carrier():
+    """The guard every §Privacy reader will eventually hit: secagg over a
+    float payload (no integer code plane to mask) must refuse, naming the
+    quantizing carrier to add rather than failing downstream."""
+    with pytest.raises(ValueError) as e:
+        make_compressor("topk:0.05>>secagg")
+    msg = str(e.value)
+    assert "quantizing carrier" in msg and "qsgd:4>>secagg" in msg

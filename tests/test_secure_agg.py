@@ -1,0 +1,451 @@
+"""Differential unmasking harness for the privacy wire stack (DESIGN.md §11).
+
+The headline claim, in the style of tests/test_kernel_parity.py: a masked
+run must equal the unmasked run **bit-exactly** — params, ctx-stripped
+comm_state, and ledger wire bytes — because secagg's ring masks cancel in
+integer arithmetic (mod 2^w), never in float arithmetic.  The harness runs
+the masked-vs-base pairs of ``tests/parity_cases.PRIVACY_CASES`` at the
+pipeline level and drives the sim / async / population engines end to end
+(the star / hier / gossip wires run under 8 host devices in
+tests/distributed_cases.case_secagg_masked_bitexact).
+
+Dropout-of-one semantics are the mask-RECOVERY flavour: in-engine a dropped
+(zero-weight) client can never corrupt the aggregate — decode unmasks per
+client via the payload ctx — and at the raw code-plane level the tests show
+the sum breaks without the dropped client's mask and is restored exactly by
+``dropout_correction`` (the seed-recovery round of Bonawitz et al.).
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from test_compressors import HAVE_HYPOTHESIS, _st, fuzz
+if HAVE_HYPOTHESIS:
+    from hypothesis import strategies as st
+
+from parity_cases import PRIVACY_CASES, build
+from repro.compress import make_compressor
+from repro.compress.pipeline import error_feedback
+from repro.compress.secure_agg import (CTX_BITS, DPNoise, SecAgg,
+                                       bind_n_leaves, drop_mask_ctx,
+                                       dropout_correction, has_mask_ctx,
+                                       inject_mask_ctx, ring_mask,
+                                       zcdp_epsilon)
+from repro.compress.wire_format import payload_nbytes
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def _int_planes(payload):
+    return [np.asarray(l) for l in jax.tree.leaves(payload)
+            if np.issubdtype(np.asarray(l).dtype, np.integer)]
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-level differential over PRIVACY_CASES
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c", PRIVACY_CASES, ids=lambda c: c["name"])
+def test_masked_decode_bitexact(c):
+    """With an injected cohort context, every client's masked payload
+    decodes to exactly what the clear pipeline decodes — mask removal is
+    integer subtraction, so there is no tolerance to grant."""
+    masked, base = build(c, "jax"), _build_base(c)
+    C, n = 4, 3001
+    key = jax.random.PRNGKey(7)
+    for i in range(C):
+        r = jax.random.fold_in(jax.random.PRNGKey(1), i)
+        x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(2), i),
+                              (n,)) * 2.0
+        pb, _ = base.encode(base.init((n,)), r, x)
+        stm = inject_mask_ctx(masked.init((n,)), key, i, C)
+        pm, _ = masked.encode(stm, r, x)
+        assert np.array_equal(np.asarray(base.decode(pb, n)),
+                              np.asarray(masked.decode(pm, n))), c["name"]
+
+
+def _build_base(c):
+    from repro.compress import make_compressor
+    pipe = make_compressor(c["base"], backend="jax", **c["kw"])
+    if c["wrapper"] == "ef":
+        pipe = error_feedback(pipe)
+    return pipe
+
+
+@pytest.mark.parametrize("c", PRIVACY_CASES, ids=lambda c: c["name"])
+def test_code_plane_sum_cancels(c):
+    """Sum of masked integer planes over the full cohort == sum of clear
+    planes mod 2^w — the secure-aggregation property itself, measured on
+    the raw wire payloads (what a server summing masked codes would see)."""
+    masked, base = build(c, "jax"), _build_base(c)
+    C, n = 5, 3001
+    key = jax.random.PRNGKey(3)
+    clear_planes, masked_planes = None, None
+    for i in range(C):
+        r = jax.random.fold_in(jax.random.PRNGKey(1), i)
+        x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(2), i),
+                              (n,)) * 2.0
+        pb, _ = base.encode(base.init((n,)), r, x)
+        pm, _ = masked.encode(
+            inject_mask_ctx(masked.init((n,)), key, i, C), r, x)
+        pm = {k: v for k, v in pm.items() if k != "secagg_ctx"}
+        cb = [p.astype(np.int64) for p in _int_planes(pb)]
+        cm = [p.astype(np.int64) for p in _int_planes(pm)]
+        clear_planes = cb if clear_planes is None else \
+            [a + b for a, b in zip(clear_planes, cb)]
+        masked_planes = cm if masked_planes is None else \
+            [a + b for a, b in zip(masked_planes, cm)]
+    for cp, mp, ref in zip(clear_planes, masked_planes, _int_planes(
+            {k: v for k, v in pm.items()})):
+        mod = 1 << (8 * ref.dtype.itemsize)
+        assert np.array_equal(cp % mod, mp % mod), c["name"]
+
+
+@pytest.mark.parametrize("c", PRIVACY_CASES, ids=lambda c: c["name"])
+def test_ledger_and_payload_bytes(c):
+    """Masking is free on the ledger (wire_bits identical to the clear
+    pipeline) and costs exactly CTX_BITS/8 payload bytes per leaf (the
+    simulated key-agreement channel); masked planes are uniform, so the
+    entropy-coder estimate collapses to the wire bits."""
+    masked, base = build(c, "jax"), _build_base(c)
+    n = 5000
+    assert masked.wire_bits(n) == base.wire_bits(n)
+    assert payload_nbytes(masked, n) == payload_nbytes(base, n) + CTX_BITS // 8
+    if c["wrapper"] is None and "dpnoise" not in c["spec"]:
+        # SecAgg reports inner *wire* bits as its entropy estimate
+        assert masked.entropy_bits(n) == masked.wire_bits(n)
+
+
+def test_dropout_breaks_sum_and_correction_restores():
+    """Dropout-of-one, made explicit: the partial masked sum is wrong by
+    exactly the dropped client's mask, and dropout_correction recomputes it
+    from the shared key (mask-recovery semantics)."""
+    base = make_compressor("qsgd:4")
+    masked = make_compressor("qsgd:4>>secagg")
+    C, n, drop = 4, 3001, 2
+    key = jax.random.PRNGKey(11)
+    payloads, clears = [], []
+    for i in range(C):
+        r = jax.random.fold_in(jax.random.PRNGKey(1), i)
+        x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(2), i),
+                              (n,)) * 2.0
+        pb, _ = base.encode(base.init((n,)), r, x)
+        pm, _ = masked.encode(
+            inject_mask_ctx(masked.init((n,)), key, i, C), r, x)
+        payloads.append(pm)
+        clears.append(pb)
+    survivors = [i for i in range(C) if i != drop]
+    qc = sum(np.asarray(clears[i]["q"], np.int64) for i in survivors) % 256
+    qm = sum(np.asarray(payloads[i]["q"], np.int64) for i in survivors) % 256
+    assert not np.array_equal(qc, qm), "dropout must break the masked sum"
+    corr = dropout_correction(key, drop, C, clears[0])
+    fixed = (qm + np.asarray(corr["q"], np.int64)) % 256
+    assert np.array_equal(qc, fixed), "mask recovery must restore the sum"
+
+
+def test_zero_weight_client_cannot_corrupt_engine_decode():
+    """In-engine dropout safety: decode unmasks per client via the payload
+    ctx, so the reconstruction of every OTHER client is untouched by who
+    drops out — there is nothing weight-zeroing can corrupt."""
+    masked = make_compressor("qsgd:4>>secagg")
+    base = make_compressor("qsgd:4")
+    n, C = 3001, 4
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    r = jax.random.PRNGKey(1)
+    pm, _ = masked.encode(inject_mask_ctx(masked.init((n,)), key, 1, C), r, x)
+    pb, _ = base.encode(base.init((n,)), r, x)
+    assert np.array_equal(np.asarray(masked.decode(pm, n)),
+                          np.asarray(base.decode(pb, n)))
+
+
+# ---------------------------------------------------------------------------
+# Guards (satellite: unmaskable combinations fail naming the carrier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["secagg", "topk:0.05>>secagg",
+                                  "sketch:3,512>>secagg",
+                                  "randmask:0.1>>secagg"])
+def test_secagg_rejects_float_carriers(spec):
+    with pytest.raises(ValueError, match="quantizing carrier"):
+        make_compressor(spec, fraction=0.05)
+
+
+def test_secagg_error_names_a_fix():
+    with pytest.raises(ValueError, match="qsgd:4>>secagg"):
+        make_compressor("topk:0.05>>secagg")
+
+
+def test_stage_after_privacy_rejected():
+    with pytest.raises(ValueError, match="cannot follow a privacy stage"):
+        make_compressor("qsgd:4>>secagg>>topk:0.1")
+
+
+def test_nested_secagg_rejected():
+    with pytest.raises(ValueError, match="once"):
+        SecAgg(make_compressor("qsgd:4>>secagg"))
+
+
+def test_privacy_suffix_rejected():
+    with pytest.raises(ValueError, match="carrier stages"):
+        make_compressor("qsgd:4>>secagg@kernel")
+
+
+def test_dpnoise_needs_finite_clip_with_noise():
+    with pytest.raises(ValueError, match="finite clip"):
+        DPNoise(make_compressor("qsgd:4"), 0.5, float("inf"))
+
+
+def test_dpnoise_accepts_colon_clip_form():
+    # the ISSUE grammar "dpnoise:<sigma>[:<clip>]"; docs use the comma form
+    a = make_compressor("qsgd:4>>dpnoise:0.8:2.0")
+    b = make_compressor("qsgd:4>>dpnoise:0.8,2.0")
+    assert a.name == b.name and a.clip == b.clip == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis-optional)
+# ---------------------------------------------------------------------------
+
+@fuzz(_st(lambda: st.integers(2, 9)), _st(lambda: st.integers(1, 257)),
+      _st(lambda: st.sampled_from(["int8", "uint8", "int16", "int32"])),
+      fallback=[(2, 17, "int8"), (5, 64, "uint8"), (3, 31, "int16"),
+                (7, 257, "int32")], max_examples=12)
+def test_ring_mask_cancellation_any_domain(C, n, dtype):
+    """Sum of ring masks over any full cohort is identically zero in any
+    integer code domain — the telescoping identity the whole stack rests
+    on, independent of what pipeline produced the codes."""
+    key = jax.random.PRNGKey(C * 1000 + n)
+    ref = jnp.zeros((n,), jnp.dtype(dtype))
+    total = np.zeros((n,), np.int64)
+    for i in range(C):
+        total += np.asarray(ring_mask(key, i, C, ref), np.int64)
+    mod = 1 << (8 * np.dtype(dtype).itemsize)
+    assert np.all(total % mod == 0)
+
+
+@fuzz(_st(lambda: st.integers(0, 2 ** 16)),
+      fallback=[(0,), (7,), (123,)], max_examples=8)
+def test_dpnoise_sigma0_clipinf_is_noop(seed):
+    """dpnoise(sigma=0, clip=inf) is a bit-exact no-op: payload, state and
+    decode identical to the bare pipeline (the inner rng stream is passed
+    through untouched)."""
+    base = make_compressor("topk:0.05>>qsgd:4")
+    noop = DPNoise(make_compressor("topk:0.05>>qsgd:4"), 0.0, float("inf"))
+    n = 3001
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 2.0
+    r = jax.random.fold_in(jax.random.PRNGKey(1), seed)
+    pb, sb = base.encode(base.init((n,)), r, x)
+    pn, sn = noop.encode(noop.init((n,)), r, x)
+    assert _leaves_equal(pb, pn) and _leaves_equal(sb, sn)
+    assert np.array_equal(np.asarray(base.decode(pb, n)),
+                          np.asarray(noop.decode(pn, n)))
+    assert noop.dp_rho_per_round() == 0.0
+
+
+def test_dpnoise_rho_accounting():
+    dp = make_compressor("topk:0.05>>qsgd:4>>dpnoise:0.8")
+    assert dp.dp_rho_per_round() == pytest.approx(0.5 / 0.8 ** 2)
+    both = make_compressor("qsgd:4>>dpnoise:0.5>>secagg")
+    assert both.dp_rho_per_round() == pytest.approx(2.0)
+    assert zcdp_epsilon(0.0) == 0.0
+    assert zcdp_epsilon(2.0, 1e-5) > zcdp_epsilon(0.5, 1e-5) > 0.0
+
+
+def test_dpnoise_multi_leaf_clip_splits_budget():
+    """The billed rho = 0.5/sigma^2 is only correct if `clip` bounds the
+    JOINT L2 of the whole update — with L leaves, each leaf must be
+    clipped to clip/sqrt(L), not to the full clip (which would make the
+    true cost L x 0.5/sigma^2 and the ledger a lie)."""
+    n, clip, L = 257, 2.0, 4
+    dp = DPNoise(make_compressor("none"), 0.0, clip)
+    assert bind_n_leaves(dp, L) == 1
+    # a leaf with norm above the per-leaf share gets scaled to clip/sqrt(L)
+    x = jnp.ones((n,), jnp.float32)            # ||x|| = sqrt(257) > 1
+    payload, _ = dp.encode(dp.init((n,)), jax.random.PRNGKey(0), x)
+    nrm = float(jnp.linalg.norm(payload["x"]))
+    assert nrm == pytest.approx(clip / math.sqrt(L), rel=1e-5)
+    # joint sensitivity over L such leaves is back at `clip` exactly
+    assert math.sqrt(L) * nrm == pytest.approx(clip, rel=1e-5)
+    # rho stays leaf-count independent BECAUSE of the split
+    noisy = DPNoise(make_compressor("none"), 0.5, clip)
+    bind_n_leaves(noisy, L)
+    assert noisy.dp_rho_per_round() == pytest.approx(0.5 / 0.5 ** 2)
+    # a below-share leaf is untouched (clipping is a cap, not a rescale)
+    small = jnp.full((n,), 1e-3, jnp.float32)
+    p2, _ = dp.encode(dp.init((n,)), jax.random.PRNGKey(0), small)
+    assert np.array_equal(np.asarray(p2["x"]), np.asarray(small))
+
+
+def test_bind_n_leaves_walks_wrappers():
+    """bind_n_leaves must reach a DPNoise nested under EF + SecAgg + Chain
+    (the uplink_pipeline wrapping order) — and the engine's ledger_terms
+    must bind the model's actual leaf count."""
+    pipe = error_feedback(
+        make_compressor("topk:0.05>>qsgd:4>>dpnoise:0.8>>secagg"))
+    assert bind_n_leaves(pipe, 7) == 1
+    inner = pipe.inner            # SecAgg
+    assert inner.inner.n_leaves == 7
+    assert bind_n_leaves(make_compressor("topk:0.05>>qsgd:4"), 3) == 0
+    with pytest.raises(ValueError, match=">= 1"):
+        bind_n_leaves(pipe, 0)
+
+    from repro.configs.registry import get_arch
+    from repro.core.engine import ledger_terms, _param_sizes
+    from repro.core.types import FLConfig
+    from repro.models.model import Model
+    model = Model(get_arch("paper_lm"))
+    _, up, _ = ledger_terms(model, FLConfig(
+        uplink_compressor="topk:0.05>>qsgd:4>>dpnoise:0.8>>secagg"))
+    L = len(_param_sizes(model))
+    assert L > 1
+    assert up.inner.inner.n_leaves == L      # ef -> secagg -> dpnoise
+
+
+def test_uninjected_context_is_transparently_unmasked():
+    """cohort=0 (the zero-initialised state) draws a zero mask, so the
+    stage degrades to the clear pipeline outside an engine hop."""
+    base = make_compressor("qsgd:4")
+    masked = make_compressor("qsgd:4>>secagg")
+    n = 3001
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    r = jax.random.PRNGKey(1)
+    pb, _ = base.encode(base.init((n,)), r, x)
+    pm, _ = masked.encode(masked.init((n,)), r, x)
+    assert np.array_equal(np.asarray(pb["q"]), np.asarray(pm["q"]))
+
+
+# ---------------------------------------------------------------------------
+# Engine differentials: sim / async / population (star+hier+gossip run in
+# tests/distributed_cases.case_secagg_masked_bitexact under 8 devices)
+# ---------------------------------------------------------------------------
+
+def _engine_pair(spec_base, spec_masked, topo_fn, pop=None, rounds=3,
+                 **flkw):
+    from repro.configs.registry import get_arch
+    from repro.core.engine import make_round_engine, run_rounds
+    from repro.core.types import FLConfig
+    from repro.data.synthetic import FedDataConfig, sample_round
+    from repro.models.model import Model
+
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    fd = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=4, seq_len=32,
+                       batch_per_client=2, heterogeneity=1.5)
+
+    def dfn(r):
+        return sample_round(fd, jax.random.fold_in(jax.random.PRNGKey(1), r))
+
+    outs = []
+    for spec in (spec_base, spec_masked):
+        fl = FLConfig(uplink_compressor=spec, local_steps=1, local_lr=0.2,
+                      latency_profile="constant", **flkw)
+        e = make_round_engine(model, fl, topo_fn(), chunk=32, data_fn=dfn,
+                              population=pop)
+        st = e.init_fn(jax.random.PRNGKey(0))
+        st, ms = run_rounds(e, st, dfn, rounds, chunk=2, donate=False)
+        outs.append((st, ms))
+    return outs
+
+
+def _assert_engine_bitexact(tag, base_out, masked_out):
+    (sb, mb), (sm, mm) = base_out, masked_out
+    assert _leaves_equal(sb.params, sm.params), f"{tag}: params"
+    cb = (sb.comm_state["slab"] if isinstance(sb.comm_state, dict)
+          else sb.comm_state)
+    cm = (sm.comm_state["slab"] if isinstance(sm.comm_state, dict)
+          else sm.comm_state)
+    cm = drop_mask_ctx(cm) if cm is not None else None
+    assert _leaves_equal(cb if cb is not None else (),
+                         cm if cm is not None else ()), f"{tag}: comm_state"
+    # uplink_entropy intentionally differs: masked codes are uniform, so
+    # the entropy-coder estimate collapses to the wire bits (DESIGN.md §11)
+    for f in ("uplink_wire", "downlink_wire", "uplink_dense"):
+        assert np.array_equal(np.asarray(getattr(mb["ledger"], f)),
+                              np.asarray(getattr(mm["ledger"], f))), \
+            f"{tag}: ledger.{f}"
+    assert np.all(np.asarray(mm["ledger"].uplink_entropy)
+                  >= np.asarray(mb["ledger"].uplink_entropy)), \
+        f"{tag}: masked entropy below clear entropy"
+
+
+@pytest.mark.parametrize("base,masked", [
+    ("topk:0.05>>qsgd:4", "topk:0.05>>qsgd:4>>secagg"),   # EF chain
+    ("qsgd:4@kernel", "qsgd:4@kernel>>secagg"),           # Pallas backend
+    ("ternary@fused", "ternary@fused>>secagg"),           # packed wire
+])
+def test_sim_engine_masked_bitexact(base, masked):
+    from repro.core.engine import Topology
+    outs = _engine_pair(base, masked, lambda: Topology.sim(4))
+    _assert_engine_bitexact(f"sim {masked}", outs[0], outs[1])
+
+
+def test_async_engine_masked_bitexact():
+    """Async arrival/flush path: pending rows are committed pre-decoded, so
+    mask removal must already have happened per dispatch — bit-exactness
+    across buffered aggregation proves the ctx threading survives it."""
+    from repro.core.engine import Topology
+    outs = _engine_pair(
+        "topk:0.25>>qsgd:4", "topk:0.25>>qsgd:4>>secagg",
+        lambda: Topology.async_(4, buffer_size=2,
+                                latency_profile="constant"), rounds=6)
+    _assert_engine_bitexact("async", outs[0], outs[1])
+
+
+def test_population_engine_masked_bitexact():
+    """ResidualStore gather/scatter: the mask ctx rows ride the slab like
+    any comm state, and the degenerate population reproduces the dense
+    masked run bit-for-bit."""
+    from repro.core.engine import Topology
+    from repro.core.population import ClientPopulation
+    pop = ClientPopulation(n_clients=4, cohort=4, capacity=4)
+    outs = _engine_pair("topk:0.25>>qsgd:4", "topk:0.25>>qsgd:4>>secagg",
+                        lambda: Topology.sim(4), pop=pop)
+    _assert_engine_bitexact("population", outs[0], outs[1])
+
+
+def test_fl_config_knobs_match_spec_suffix():
+    """FLConfig.secure_agg / dp_sigma / dp_clip produce the same pipeline
+    as the spec-string suffixes (one grammar, two entry points)."""
+    from repro.core.engine import uplink_pipeline
+    from repro.core.types import FLConfig
+    a = uplink_pipeline(FLConfig(uplink_compressor="qsgd:4",
+                                 secure_agg=True))
+    b = uplink_pipeline(FLConfig(uplink_compressor="qsgd:4>>secagg"))
+    assert a.name == b.name
+    c = uplink_pipeline(FLConfig(uplink_compressor="qsgd:4", dp_sigma=0.8,
+                                 dp_clip=1.0, secure_agg=True))
+    d = uplink_pipeline(FLConfig(
+        uplink_compressor="qsgd:4>>dpnoise:0.8>>secagg"))
+    assert c.name == d.name
+    assert c.dp_rho_per_round() == pytest.approx(d.dp_rho_per_round())
+
+
+def test_dp_rho_rides_the_ledger():
+    """The privacy spend accumulates through the metrics ledger exactly
+    like bytes: rounds x clients x rho per round."""
+    from repro.core.engine import Topology
+    outs = _engine_pair("topk:0.05>>qsgd:4",
+                        "topk:0.05>>qsgd:4>>dpnoise:0.8>>secagg",
+                        lambda: Topology.sim(4), rounds=3)
+    _, (st, ms) = outs
+    rho = np.asarray(ms["ledger"].dp_rho)
+    per_round = 4 * 0.5 / 0.8 ** 2
+    np.testing.assert_allclose(rho, per_round, rtol=1e-6)
+    assert math.isfinite(zcdp_epsilon(rho.sum(), 1e-5))
+    # the base run has no dpnoise stage -> no dp_rho leaf at all
+    assert outs[0][1]["ledger"].dp_rho is None
+
+
+def test_has_mask_ctx_walks_wrappers():
+    ef = error_feedback(make_compressor("topk:0.05>>qsgd:4>>secagg"))
+    assert has_mask_ctx(ef)
+    assert not has_mask_ctx(make_compressor("topk:0.05>>qsgd:4"))
