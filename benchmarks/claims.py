@@ -119,6 +119,21 @@ REGISTRY: tuple[Claim, ...] = (
           "The dpnoise sweep traces the privacy/bytes/accuracy Pareto: "
           "stronger noise buys a lower per-client (eps, delta) guarantee "
           "at identical wire cost, paying only in loss."),
+    # --- observability (DESIGN.md §12) ------------------------------------
+    Claim("obs/claim_stage_sum_exact", "obs",
+          _cmd("obs") + "   # CI: --smoke; harness: "
+          "PYTHONPATH=src python -m pytest tests/test_obs.py",
+          "exact (f32 residual identity) + f64 rtol 1e-6 direct sum",
+          "The flight recorder's per-stage byte slots reconstruct the "
+          "CommLedger wire totals bit-exactly in f32: attribution adds "
+          "information, never a second bookkeeping that can drift."),
+    Claim("obs/claim_telemetry_overhead", "obs",
+          _cmd("obs"),
+          "traced wall-clock <= 1.05 x untraced (full run; smoke only "
+          "checks the trace validates and the report renders)",
+          "Recording RoundStats in-graph and spilling the JSONL trace "
+          "host-side costs <= 5% wall-clock on paper_lm: observability "
+          "is cheap enough to leave on.", smoke=False),
 )
 
 _BY_ID = {c.id: c for c in REGISTRY}

@@ -896,9 +896,21 @@ def bench_fused(rounds):
              ag_by_dtype_packed=str(ag_p).replace(",", "|"),
              hbm_mb_staged=round(hbm_s / 1e6, 1),
              hbm_mb_packed=round(hbm_p / 1e6, 1))
+        extra = {}
+        if not (eq and eq_s):
+            # flight-recorder cross-check (repro.obs + launch.hlo_analysis):
+            # decompose the billed bytes per pipeline stage and name the
+            # stage whose share best explains the HLO/ledger gap
+            from repro.obs.telemetry import telemetry_spec
+            spec_tel = telemetry_spec(pipe_p, None, sizes, up_scale=float(C))
+            msg = hlo_analysis.name_stage_mismatch(
+                spec_tel.up_names, spec_tel.up_table,
+                measured=float(sum(ag_p.values())),
+                expected_total=float(ledger_total_p))
+            extra["stage_hint"] = msg.replace(",", ";") or "none"
         emit(f"fused/claim_ledger_eq_hlo/{spec}", 0.0,
              hlo_u8=ag_p.get("u8", 0), ledger_u8=led_p.get("uint8", -1),
-             staged_s8_eq=eq_s, holds=bool(eq and eq_s))
+             staged_s8_eq=eq_s, holds=bool(eq and eq_s), **extra)
         emit(f"fused/claim_packed_shrinks_wire/{spec}", 0.0,
              reduction=round(tot_s / max(tot_p, 1), 3),
              holds=bool(tot_p < tot_s))
@@ -1023,6 +1035,103 @@ def bench_privacy(rounds):
          sigmas="0|0.5|1", note="per-client-eps;loss-reported-not-gated")
 
 
+def bench_obs(rounds):
+    """DESIGN.md §12 — the flight recorder, two claims on paper_lm:
+
+      * claim_stage_sum_exact — with FLConfig.telemetry on, the RoundStats
+        per-stage byte slots reconstruct CommLedger.uplink_wire /
+        downlink_wire bit-exactly in f32 (residual construction) and match
+        the direct stage-table sum in f64;
+      * claim_telemetry_overhead — a traced run (telemetry + JSONL flight
+        recorder) costs <= 1.05x the untraced telemetry-off wall clock
+        (smoke=False: wall-clock race, the full run enforces the bound);
+        the trace must validate and the report must render.
+    """
+    import tempfile
+    from repro.obs.report import render, summarize
+    from repro.obs.trace import Tracer, validate_file
+
+    r = 4 if SMOKE else max(8, rounds)
+    base = dict(uplink_compressor="topk", topk_fraction=0.05,
+                error_feedback=True, eval_every=2)
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    dcfg = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=8,
+                         seq_len=48, batch_per_client=4, heterogeneity=2.0)
+    ev = eval_batch(dcfg, jax.random.PRNGKey(99), batch_size=8)
+
+    def data_fn(rd):
+        return sample_round(dcfg, jax.random.fold_in(
+            jax.random.PRNGKey(1), rd))
+
+    def metrics_fn(state, m):
+        return dict(m, eval_loss=model.loss(state.params, ev, chunk=48)[0])
+
+    def one(fl, tracer=None):
+        sim = make_sim_step(model, fl, 8, chunk=48)
+        state = sim.init_fn(jax.random.PRNGKey(0))
+        t0 = time.perf_counter()
+        state, ms = run_rounds(sim.engine, state, data_fn, r, chunk=4,
+                               metrics_fn=metrics_fn, tracer=tracer)
+        jax.block_until_ready(ms)
+        return sim, ms, time.perf_counter() - t0
+
+    # --- stage-sum exactness (deterministic; smoke-checkable) -------------
+    _, ms, _ = one(FLConfig(telemetry=True, **base))
+    up = np.asarray(ms["round_stats"].up_stage_bytes)
+    dn = np.asarray(ms["round_stats"].down_stage_bytes)
+    uw = np.asarray(ms["ledger"].uplink_wire)
+    dw = np.asarray(ms["ledger"].downlink_wire)
+
+    def _residual_exact(slots, totals):
+        ok = True
+        for i in range(slots.shape[0]):
+            partial = np.float32(0.0)
+            for v in slots[i][:-1]:
+                partial = np.float32(partial + np.float32(v))
+            ok &= bool(slots[i][-1]
+                       == np.float32(np.float32(totals[i]) - partial))
+        return ok
+
+    exact = _residual_exact(up, uw) and _residual_exact(dn, dw)
+    close64 = (np.allclose(up.astype(np.float64).sum(1), uw, rtol=1e-6)
+               and np.allclose(dn.astype(np.float64).sum(1), dw, rtol=1e-6))
+    emit("obs/claim_stage_sum_exact", 0.0,
+         holds=bool(exact and close64), rounds=r,
+         f32_residual=exact, f64_close=close64,
+         up_mb=round(float(uw.sum()) / 1e6, 4))
+
+    # --- overhead: traced vs untraced (wall-clock; not smoke-checkable) ---
+    # warm both paths, then INTERLEAVE off/on reps and take the min of each
+    # side: machine-load drift on a shared runner is ~10% run-to-run, far
+    # above the 5% bound, so timing all-off-then-all-on would let the
+    # scheduler decide the claim.  Alternating pairs exposes both sides to
+    # the same load profile; min-of-reps discards the blips.
+    reps = 1 if SMOKE else 5
+    one(FLConfig(**base))
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "bench_obs.jsonl")
+        tracer = Tracer(path, meta=dict(arch="paper_lm", rounds=r))
+        one(FLConfig(telemetry=True, **base), tracer=tracer)   # warm-up
+        wall_off, wall_on, ms2, sim2 = np.inf, np.inf, None, None
+        for _ in range(reps):
+            wall_off = min(wall_off, one(FLConfig(**base))[2])
+            sim2, ms2, w = one(FLConfig(telemetry=True, **base),
+                               tracer=tracer)
+            wall_on = min(wall_on, w)
+        tracer.emit_rounds(ms2, spec=sim2.engine.aux.get("telemetry"))
+        tracer.close()
+        records = validate_file(path)
+        report = render(summarize(records))
+    margin = 2.0 if SMOKE else 1.05
+    emit("obs/claim_telemetry_overhead", wall_on / r * 1e6,
+         untraced_us=round(wall_off / r * 1e6, 1),
+         ratio=round(wall_on / max(wall_off, 1e-9), 3),
+         trace_records=len(records), report_lines=len(report.splitlines()),
+         holds=bool(wall_on <= margin * wall_off
+                    and len(records) > r and len(report) > 0))
+
+
 BENCHES = {
     "compression": bench_compression,
     "kernels": bench_kernels,
@@ -1038,6 +1147,7 @@ BENCHES = {
     "scale": bench_scale,
     "fused": bench_fused,
     "privacy": bench_privacy,
+    "obs": bench_obs,
 }
 
 
@@ -1066,7 +1176,7 @@ def _write_bench_json(path: str, args) -> None:
         d = dict(kv.split("=", 1) for kv in derived.split(";") if "=" in kv)
         rows.append({"name": name, "us_per_call": float(us), "derived": d})
     payload = {
-        "pr": 8,
+        "pr": 9,
         "git_sha": sha,
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,

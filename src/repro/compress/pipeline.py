@@ -29,7 +29,8 @@ import numpy as np
 from repro.compress.api import CommTransform, Identity
 
 __all__ = ["Chain", "chain", "ErrorFeedback", "error_feedback",
-           "MomentumCorrection", "momentum_correction"]
+           "MomentumCorrection", "momentum_correction",
+           "stage_sequence", "stage_input_lens"]
 
 
 class Chain(CommTransform):
@@ -112,6 +113,28 @@ class Chain(CommTransform):
             total += s.meta_entropy_bits_given(m, hint)
             hint = s.carrier_hint(m)
         return total
+
+
+def stage_sequence(pipe: CommTransform) -> Tuple[CommTransform, ...]:
+    """The carrier stage sequence under any wrappers — the flight recorder's
+    per-stage attribution axis (repro.obs.telemetry, DESIGN.md §12).
+
+    Wrappers (EF / DGC momentum, SecAgg, DPNoise) all delegate their byte
+    accounting to ``.inner`` (``meta_bits(n) == inner.wire_bits(n)``, no
+    carrier of their own), so unwrapping them and decomposing the innermost
+    chain reproduces the wrapped pipeline's ``wire_bits`` exactly."""
+    while hasattr(pipe, "inner"):
+        pipe = pipe.inner
+    return tuple(pipe.stages) if isinstance(pipe, Chain) else (pipe,)
+
+
+def stage_input_lens(stages, n):
+    """Input length each stage of a carrier sequence sees for an n-length
+    leaf: ``n``, then the preceding carrier lengths (``Chain._lens``)."""
+    ms = [n]
+    for s in stages[:-1]:
+        ms.append(s.carrier_len(ms[-1]))
+    return ms
 
 
 def chain(*transforms: CommTransform) -> CommTransform:

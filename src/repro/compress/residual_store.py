@@ -127,6 +127,46 @@ class ResidualStore:
         eq = ids[:, None] == state["client"][None, :]
         return eq.any(axis=1), jnp.argmax(eq, axis=1), eq
 
+    def _assign_slots(self, state, ids):
+        """(found (M,), slot (M,)) — the slot each id commits to: hits
+        reuse their slot, misses take free slots first, then the least-
+        recently-committed occupied ones (the scatter contract; shared by
+        ``scatter`` and the telemetry ``stats`` so the eviction preview
+        cannot drift from the real assignment)."""
+        S = self.capacity
+        client, stamp = state["client"], state["stamp"]
+        found, hit_slot, eq = self._match(state, ids)
+        hit_slots = eq.any(axis=0)                             # (S,)
+        key = jnp.where(hit_slots, _HIT,
+                        jnp.where(client < 0, _FREE, stamp))
+        order = jnp.argsort(key, stable=True)  # free, then LRU, hits last
+        rank = jnp.cumsum((~found).astype(jnp.int32)) - 1
+        slot = jnp.where(found, hit_slot,
+                         order[jnp.clip(rank, 0, S - 1)])
+        return found, slot
+
+    def stats(self, state, ids):
+        """Flight-recorder counters for one gather/scatter cycle over
+        ``ids`` — a pure read (repro.obs.telemetry, DESIGN.md §12).
+
+        ``hits`` / ``misses`` describe the gather; ``evictions`` previews
+        the occupied slots the following scatter will fold out (misses
+        landing on non-free slots under the same free-then-LRU
+        assignment); ``sketch_recovered`` counts the missing rows gather
+        answers from the tail estimate (every miss under the ``sketch``
+        policy — thresholding may still zero unrecoverable coordinates —
+        and 0 under ``drop``, where misses read zeros)."""
+        found, slot = self._assign_slots(state, ids)
+        miss = (~found).sum().astype(jnp.float32)
+        evict = (~found) & (state["client"][slot] >= 0)
+        return {
+            "hits": found.sum().astype(jnp.float32),
+            "misses": miss,
+            "evictions": evict.sum().astype(jnp.float32),
+            "sketch_recovered": (miss if self.eviction == "sketch"
+                                 else jnp.float32(0.0)),
+        }
+
     # ------------------------------------------------------------- tail hash
     def _coords(self, ids, n: int):
         """Global flat coordinates id*n + j in uint32 (wraparound feeds the
@@ -261,14 +301,7 @@ class ResidualStore:
         if M > S:
             raise ValueError(f"cohort of {M} ids exceeds store capacity {S}")
         client, stamp = state["client"], state["stamp"]
-        found, hit_slot, eq = self._match(state, ids)
-        hit_slots = eq.any(axis=0)                             # (S,)
-        key = jnp.where(hit_slots, _HIT,
-                        jnp.where(client < 0, _FREE, stamp))
-        order = jnp.argsort(key, stable=True)  # free, then LRU, hits last
-        rank = jnp.cumsum((~found).astype(jnp.int32)) - 1
-        slot = jnp.where(found, hit_slot,
-                         order[jnp.clip(rank, 0, S - 1)])
+        found, slot = self._assign_slots(state, ids)
 
         new_state = dict(state)
         if self.eviction == "sketch":

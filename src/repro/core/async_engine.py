@@ -88,6 +88,7 @@ from repro.core.aggregation import comm_state_init
 from repro.core.types import CommLedger, FLConfig, FLState
 from repro.data.pipeline import LATENCY_PROFILES, device_latency
 from repro.models.model import Model
+from repro.obs import telemetry as obs_tel
 
 _INF = jnp.float32(jnp.inf)
 
@@ -164,6 +165,7 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
     M = population.cohort if population is not None else C
     K, alpha, profile, deadline = _async_knobs(fl, topo, n_slots=M)
     terms, up, down = eng.ledger_terms(model, fl)
+    tele = eng._telemetry_spec(fl, up, down, eng._param_sizes(model))
     stateful = up.stateful
     store = (population.make_store(up, model.abstract_params())
              if population is not None else None)
@@ -385,6 +387,26 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
                 ctx["ledger"], dp_rho=jnp.float32(terms["dp_rho"]))
         return ctx
 
+    def hop_telemetry(ctx):
+        # flight recorder (repro.obs, DESIGN.md §12): per-event RoundStats —
+        # one upload per event (up_unit=1 against the absolute per-event
+        # ledger), this event's staleness as a one-hot histogram row, the
+        # post-arrival buffer fill, and the arriving client's store outcome.
+        # Reads already-computed values only; the off graph is identical.
+        st = ctx["state"]
+        if store is not None:
+            ctrs = store.stats(
+                st.comm_state, st.async_state["slot_client"][ctx["c"]][None])
+        else:
+            ctrs = None
+        ctx["round_stats"] = obs_tel.round_stats(
+            tele, ctx["ledger"], up_unit=jnp.float32(1.0),
+            down_unit=ctx["n_down"],
+            staleness=ctx["tau"].astype(jnp.float32),
+            fill=ctx["fill"].astype(jnp.float32), store=ctrs,
+            selected=jnp.float32(1.0), available=jnp.float32(M))
+        return ctx
+
     def hop_finalize(ctx):
         st = ctx["state"]
         ctx["metrics"] = {
@@ -397,6 +419,8 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
             "flushed": ctx["flushed"],
             "ledger": ctx["ledger"],
         }
+        if tele is not None:
+            ctx["metrics"]["round_stats"] = ctx["round_stats"]
         ctx["new_state"] = FLState(
             params=ctx["new_params"], server_opt_state=ctx["new_sos"],
             control=None, client_controls=None,
@@ -405,16 +429,20 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
         )
         return ctx
 
-    program = eng.RoundProgram(topology=topo, hops=(
-        ("pop", hop_pop), ("arrive", hop_arrive),
-        ("flush", hop_flush), ("ledger", hop_ledger),
-        ("finalize", hop_finalize)))
+    hops = [("pop", hop_pop), ("arrive", hop_arrive),
+            ("flush", hop_flush), ("ledger", hop_ledger)]
+    if tele is not None:
+        hops.append(("telemetry", hop_telemetry))
+    hops.append(("finalize", hop_finalize))
+    program = eng.RoundProgram(topology=topo, hops=tuple(hops))
 
     aux = {"buffer_size": K, "staleness_alpha": alpha,
            "latency_profile": profile, "flush_deadline": deadline,
            "events_per_generation": K}
     if population is not None:
         aux.update(population=population, cohort=M)
+    if tele is not None:
+        aux["telemetry"] = tele
     return eng.RoundEngine(
         topology=topo, program=program, round_fn=program,
         init_fn=init_fn, n_clients=C, terms=terms, aux=aux,

@@ -53,6 +53,7 @@ from repro.core.compat import shard_map
 from repro.core.types import CommLedger, FLConfig, FLState
 from repro.models import sharding as shd
 from repro.models.model import Model
+from repro.obs import telemetry as obs_tel
 
 PyTree = Any
 
@@ -368,6 +369,16 @@ def ledger_terms(model: Model, fl: FLConfig):
     return t, up, down
 
 
+def _telemetry_spec(fl: FLConfig, up, down, sizes):
+    """The static per-stage byte spec when the flight recorder is on, else
+    None (repro.obs.telemetry).  Scaled exactly like ``ledger_terms``:
+    SCAFFOLD / FedDANE bill 2x on the uplink."""
+    if not fl.telemetry:
+        return None
+    scaff = 2.0 if fl.algorithm in ("scaffold", "feddane") else 1.0
+    return obs_tel.telemetry_spec(up, down, sizes, up_scale=scaff)
+
+
 def _make_ledger(terms: dict, n_sel) -> CommLedger:
     led = CommLedger(
         uplink_wire=n_sel * terms["up_wire"],
@@ -669,7 +680,8 @@ def _star_population_wire(base: _Wire, store) -> _Wire:
 def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
                           wire: _Wire, terms: dict, dispatch: Dispatch,
                           C: int, chunk: int,
-                          population=None) -> RoundProgram:
+                          population=None, tele=None,
+                          store=None) -> RoundProgram:
     scaffold = fl.algorithm == "scaffold"
     simulator = topo.kind == "sim"
 
@@ -813,6 +825,23 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
         ctx["ledger"] = _make_ledger(terms, ctx["n_sel"])
         return ctx
 
+    def hop_telemetry(ctx):
+        # flight recorder (repro.obs, DESIGN.md §12): reads already-computed
+        # round values + static byte terms only — params / comm_state /
+        # ledger are untouched, so the telemetry-off graph is the exact
+        # subgraph with this hop removed (tests/test_obs.py)
+        ctrs = (store.stats(ctx["state"].comm_state, ctx["ids"])
+                if store is not None else None)
+        if population is not None:
+            available = population.availability_count(ctx["state"].round,
+                                                      ctx["ids"])
+        else:
+            available = jnp.float32(C)
+        ctx["round_stats"] = obs_tel.round_stats(
+            tele, ctx["ledger"], up_unit=ctx["n_sel"], store=ctrs,
+            selected=ctx["n_sel"], available=available)
+        return ctx
+
     def hop_finalize(ctx):
         st, weights, losses = ctx["state"], ctx["weights"], ctx["losses"]
         wsum = jnp.maximum(weights.sum(), 1e-9)
@@ -822,6 +851,8 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
             "selected": ctx["n_sel"],
             "ledger": ctx["ledger"],
         }
+        if tele is not None:
+            metrics["round_stats"] = ctx["round_stats"]
         new_prev = ctx["agg"] if (simulator and fl.cmfl_threshold > 0) else None
         ctx["new_state"] = FLState(
             params=ctx["new_params"], server_opt_state=ctx["new_sos"],
@@ -844,8 +875,10 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
     hops.append(("wire", hop_wire))
     if scaffold:
         hops.append(("control", hop_control))
-    hops += [("server_opt", hop_server_opt), ("ledger", hop_ledger),
-             ("finalize", hop_finalize)]
+    hops += [("server_opt", hop_server_opt), ("ledger", hop_ledger)]
+    if tele is not None:
+        hops.append(("telemetry", hop_telemetry))
+    hops.append(("finalize", hop_finalize))
     return RoundProgram(topology=topo, hops=tuple(hops))
 
 
@@ -937,14 +970,21 @@ def _build_star(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
                 out[k] = NamedSharding(mesh, P(*lead, *sub))
         return out
 
+    tele = _telemetry_spec(fl, up, down, _param_sizes(model))
     program = _build_server_program(model, fl, topo, wire, terms, dispatch,
-                                    C, chunk, population=population)
+                                    C, chunk, population=population,
+                                    tele=tele, store=store)
+    aux = {}
+    if population is not None:
+        aux["population"] = population
+    if tele is not None:
+        aux["telemetry"] = tele
     return RoundEngine(
         topology=topo, program=program, round_fn=program,
         init_fn=init_fn, n_clients=C, terms=terms,
         state_shardings=state_shardings,
         batch_sharding_fn=batch_sharding_fn,
-        aux=({"population": population} if population is not None else {}),
+        aux=aux,
     )
 
 
@@ -991,13 +1031,18 @@ def _build_sim(model: Model, fl: FLConfig, topo: Topology,
             prev_delta=zf() if fl.cmfl_threshold > 0 else None,
         )
 
+    tele = _telemetry_spec(fl, up, down, _param_sizes(model))
     program = _build_server_program(model, fl, topo, wire, terms, dispatch,
-                                    C, chunk, population=population)
+                                    C, chunk, population=population,
+                                    tele=tele, store=store)
+    aux = {}
+    if population is not None:
+        aux.update(population=population, cohort=C)
+    if tele is not None:
+        aux["telemetry"] = tele
     return RoundEngine(topology=topo, program=program, round_fn=program,
                        init_fn=init_fn, n_clients=topo.n_clients,
-                       terms=terms,
-                       aux=({"population": population, "cohort": C}
-                            if population is not None else {}))
+                       terms=terms, aux=aux)
 
 
 # ---------------------------------------------------------------------------
@@ -1034,6 +1079,15 @@ def _build_hier(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
         "cloud_wire": sum(pod_comp.wire_bits(n) for n in nparams) / 8.0 * G,
         "dense": sum(32.0 * n for n in nparams) / 8.0 * Ce * G,
     }
+    # One TelemetrySpec serves BOTH cond branches (lax.cond needs identical
+    # output structure): edge stages are static per-round bytes, and the
+    # appended pod slot is the residual against the branch's own ledger —
+    # ~0 on edge rounds, ~cloud_wire on cloud rounds.
+    tele = None
+    if fl.telemetry:
+        tele = obs_tel.telemetry_spec(
+            up, None, nparams, up_scale=float(Ce * G),
+            extra_up=((f"pod:{fl.pod_compressor}", terms["cloud_wire"]),))
 
     # (G, Ce) client grid: one leading dim per (pod, data) axis
     comm_specs = (comm_state_specs(up, abs_params, pspecs, ("pod", "data"),
@@ -1185,6 +1239,12 @@ def _build_hier(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
                     ctx["ledger"], dp_rho=jnp.float32(rho * Ce * G))
             return ctx
 
+        def hop_telemetry(ctx):
+            ctx["round_stats"] = obs_tel.round_stats(
+                tele, ctx["ledger"], up_unit=jnp.float32(1.0),
+                selected=jnp.float32(Ce * G), available=jnp.float32(Ce * G))
+            return ctx
+
         def hop_finalize(ctx):
             st = ctx["state"]
             ctx["metrics"] = {
@@ -1192,6 +1252,8 @@ def _build_hier(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
                 "ledger": ctx["ledger"],
                 "pod_divergence": _pod_divergence(ctx["new_params"]),
             }
+            if tele is not None:
+                ctx["metrics"]["round_stats"] = ctx["round_stats"]
             ctx["new_state"] = FLState(
                 params=ctx["new_params"], server_opt_state=ctx["new_sos"],
                 control=None, client_controls=None,
@@ -1204,7 +1266,10 @@ def _build_hier(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
                 ("edge_wire", hop_wire), ("server_opt", hop_server_opt)]
         if cloud:
             hops.append(("cloud_sync", hop_cloud_sync))
-        hops += [("ledger", hop_ledger), ("finalize", hop_finalize)]
+        hops.append(("ledger", hop_ledger))
+        if tele is not None:
+            hops.append(("telemetry", hop_telemetry))
+        hops.append(("finalize", hop_finalize))
         return RoundProgram(topology=topo, hops=tuple(hops))
 
     edge_program = _make_program(cloud=False)
@@ -1247,7 +1312,8 @@ def _build_hier(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
         init_fn=init_fn, n_clients=G * Ce, terms=terms,
         state_shardings=state_shardings,
         programs={"edge": edge_program, "cloud": cloud_program},
-        aux={"n_pods": G, "clients_per_pod": Ce},
+        aux={"n_pods": G, "clients_per_pod": Ce,
+             **({"telemetry": tele} if tele is not None else {})},
     )
 
 
@@ -1304,6 +1370,11 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
         "mix_wire": payload_bytes * n_edges,
         "dense": sum(32.0 * n for n in nparams) / 8.0 * n_edges,
     }
+    # the ledger's mix_wire is absolute (already x n_edges), so the spec is
+    # scaled the same way and round_stats anchors with up_unit=1.0
+    tele = (obs_tel.telemetry_spec(comp, None, nparams,
+                                   up_scale=float(n_edges))
+            if fl.telemetry else None)
 
     comm_specs = (comm_state_specs(comp, abs_params, pspecs, ("data",))
                   if stateful else None)
@@ -1391,6 +1462,12 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
                 ctx["ledger"], dp_rho=jnp.float32(rho * C))
         return ctx
 
+    def hop_telemetry(ctx):
+        ctx["round_stats"] = obs_tel.round_stats(
+            tele, ctx["ledger"], up_unit=jnp.float32(1.0),
+            selected=jnp.float32(C), available=jnp.float32(C))
+        return ctx
+
     def hop_finalize(ctx):
         st, params = ctx["state"], ctx["params"]
         # consensus error (mean squared distance to the mean model)
@@ -1402,6 +1479,8 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
         ctx["metrics"] = {"loss": ctx["losses"].mean(),
                           "consensus": consensus,
                           "ledger": ctx["ledger"]}
+        if tele is not None:
+            ctx["metrics"]["round_stats"] = ctx["round_stats"]
         ctx["new_state"] = FLState(
             params=params, server_opt_state={},
             control=None, client_controls=None,
@@ -1410,10 +1489,12 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
         )
         return ctx
 
-    program = RoundProgram(topology=topo, hops=(
-        ("rng", hop_rng), ("local_update", hop_local_update),
-        ("mix", hop_mix), ("ledger", hop_ledger),
-        ("finalize", hop_finalize)))
+    hops = [("rng", hop_rng), ("local_update", hop_local_update),
+            ("mix", hop_mix), ("ledger", hop_ledger)]
+    if tele is not None:
+        hops.append(("telemetry", hop_telemetry))
+    hops.append(("finalize", hop_finalize))
+    program = RoundProgram(topology=topo, hops=tuple(hops))
 
     def init_fn(rng):
         p = model.init(rng)
@@ -1435,7 +1516,8 @@ def _build_gossip(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
 
     return RoundEngine(topology=topo, program=program, round_fn=program,
                        init_fn=init_fn, n_clients=C, terms=terms,
-                       state_shardings=state_shardings)
+                       state_shardings=state_shardings,
+                       aux=({"telemetry": tele} if tele is not None else {}))
 
 
 # ---------------------------------------------------------------------------
@@ -1570,11 +1652,13 @@ class RoundRunner:
     rounds keep the base round metrics and NaN-fill the eval-only leaves."""
 
     def __init__(self, engine: RoundEngine, data_fn, chunk: int = 8,
-                 metrics_fn=None, donate: bool = True, eval_every=None):
+                 metrics_fn=None, donate: bool = True, eval_every=None,
+                 tracer=None):
         self.engine = engine
         self.data_fn = data_fn
         self.chunk = max(1, chunk)
         self.metrics_fn = metrics_fn
+        self.tracer = tracer
         self.eval_every = max(1, int(engine.eval_every if eval_every is None
                                      else eval_every))
         ee = self.eval_every
@@ -1615,7 +1699,21 @@ class RoundRunner:
         done = 0
         while done < n:
             k = min(self.chunk, n - done)
-            state, m = self._jit(state, k)
+            if self.tracer is None:
+                state, m = self._jit(state, k)
+            else:
+                # span kind "compile" when this chunk shape triggered a fresh
+                # compilation (jit compiles lazily, so the span necessarily
+                # includes the first execution too); "chunk" for cache hits.
+                # block_until_ready keeps the wall-clock honest under async
+                # dispatch — tracing opts into that sync cost.
+                before = self.cache_size()
+                with self.tracer.span("chunk", rounds=k) as sp:
+                    state, m = self._jit(state, k)
+                    jax.block_until_ready(m)
+                    if before is not None and \
+                            (self.cache_size() or 0) > before:
+                        sp["kind"] = "compile"
             chunks.append(m)
             done += k
         if len(chunks) == 1:
@@ -1625,7 +1723,8 @@ class RoundRunner:
 
 
 def run_rounds(engine: RoundEngine, state, data_fn, n: int, chunk: int = 8,
-               metrics_fn=None, donate: bool = True, eval_every=None):
+               metrics_fn=None, donate: bool = True, eval_every=None,
+               tracer=None):
     """Run ``n`` FL rounds, ``chunk`` rounds per compiled scan.
 
     ``data_fn(round_idx) -> batch`` must be traceable (e.g. sampling from
@@ -1633,7 +1732,12 @@ def run_rounds(engine: RoundEngine, state, data_fn, n: int, chunk: int = 8,
     it is called inside the scan body. Returns ``(final_state, metrics)``
     where every metric leaf is stacked over a leading (n,) round dim.
     ``eval_every`` (default ``FLConfig.eval_every`` via the engine) sets the
-    ``metrics_fn`` cadence — see :class:`RoundRunner`."""
+    ``metrics_fn`` cadence — see :class:`RoundRunner`.  ``tracer`` (a
+    ``repro.obs.trace.Tracer``) records per-chunk compile/execute spans and
+    turns on the opt-in ``jax.profiler`` hook around the whole run."""
     runner = RoundRunner(engine, data_fn, chunk=chunk, metrics_fn=metrics_fn,
-                         donate=donate, eval_every=eval_every)
-    return runner.run(state, n)
+                         donate=donate, eval_every=eval_every, tracer=tracer)
+    if tracer is None:
+        return runner.run(state, n)
+    with tracer.profile():
+        return runner.run(state, n)

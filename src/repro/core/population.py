@@ -156,6 +156,15 @@ class ClientPopulation:
             jax.random.fold_in(key, i)))(ids)
         return (u < self.availability).astype(jnp.float32)
 
+    def availability_count(self, round_idx, ids):
+        """() f32: how many of this round's cohort are available — the
+        flight recorder's availability count (repro.obs.telemetry).  Pure
+        in (seed, round, ids) like ``availability_mask`` and statically the
+        full cohort at availability == 1.0, matching the callers' skip."""
+        if self.availability >= 1.0:
+            return jnp.float32(int(ids.shape[0]))
+        return self.availability_mask(round_idx, ids).sum()
+
     # ---------------------------------------------------------------- store
     def make_store(self, pipe, params) -> Optional[ResidualStore]:
         """ResidualStore for this population, or None for a stateless

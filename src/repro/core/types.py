@@ -234,6 +234,16 @@ class FLConfig:
     # round metrics and NaN-fill the eval-only leaves (engine.RoundRunner)
     eval_every: int = 1
 
+    # flight recorder (repro.obs, DESIGN.md §12): when True every round's
+    # metrics additionally carry a fixed-shape RoundStats pytree (per-stage
+    # wire byte attribution, staleness histogram, buffer occupancy, residual-
+    # store counters, selection/availability counts) next to the CommLedger.
+    # The telemetry hops only READ already-computed round values plus static
+    # byte terms, so params / comm_state / ledger stay bit-exact and the
+    # telemetry=False graph is the exact subgraph with the extra metric
+    # leaves removed (proved differentially in tests/test_obs.py).
+    telemetry: bool = False
+
     # §III.B asynchronous / semi-asynchronous updating (AsyncEngine,
     # DESIGN.md §7): the server consumes client completions in virtual-time
     # order and aggregates a FedBuff-style buffer of ``async_buffer_size``

@@ -282,6 +282,45 @@ def analyze(hlo_text: str) -> HLOStats:
     return comp_stats(entry) if entry else HLOStats()
 
 
+# ----------------------------------------------------- stage cross-checking
+
+def name_stage_mismatch(stage_names, stage_table, measured: float,
+                        expected_total: float = None,
+                        rtol: float = 0.02) -> str:
+    """Explain a collective-bytes mismatch in pipeline-stage terms.
+
+    ``stage_names`` / ``stage_table`` come from the flight recorder's
+    ``TelemetrySpec`` (``repro.obs.telemetry``, whose per-stage byte tables
+    sum to the ledger's wire total by construction); ``measured`` is what
+    the HLO actually moved (e.g. all-gather bytes over the client axis) and
+    ``expected_total`` what the ledger bills (defaults to ``sum(table)``).
+    Returns "" when they agree within ``rtol``; otherwise a message naming
+    the stage whose byte share best explains the gap — the first thing to
+    look at when a wire change breaks the HLO==ledger claim."""
+    expected = (float(sum(stage_table)) if expected_total is None
+                else float(expected_total))
+    gap = measured - expected
+    if expected > 0 and abs(gap) <= rtol * expected:
+        return ""
+    if not stage_table:
+        return (f"collective bytes mismatch: measured {measured:.0f} vs "
+                f"expected {expected:.0f} (no stage table to attribute)")
+    # the stage whose byte weight is closest to the gap magnitude is the
+    # most likely culprit (a stage dropped from / double-counted on the
+    # wire); ties go to the largest share
+    best = min(range(len(stage_table)),
+               key=lambda i: (abs(abs(gap) - float(stage_table[i])),
+                              -float(stage_table[i])))
+    share = (100.0 * float(stage_table[best]) / expected if expected
+             else 0.0)
+    direction = "missing from" if gap < 0 else "over-counted on"
+    return (f"collective bytes mismatch: measured {measured:.0f} vs "
+            f"expected {expected:.0f} (gap {gap:+.0f}); closest stage: "
+            f"'{stage_names[best]}' ({float(stage_table[best]):.0f}B/unit, "
+            f"{share:.0f}% of the wire) — likely {direction} the "
+            f"collective")
+
+
 # ------------------------------------------------------------------ roofline
 
 V5E = {"flops_bf16": 197e12, "hbm_gbps": 819e9, "ici_gbps": 50e9}

@@ -79,6 +79,15 @@ def _parse():
     ap.add_argument("--chunk", type=int, default=8,
                     help="rounds per compiled scan (run_rounds)")
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="flight recorder (DESIGN.md §12): write a "
+                         "schema-versioned JSONL trace here — span/event "
+                         "records plus one machine-readable record per "
+                         "round; implies FLConfig.telemetry. Render with "
+                         "python -m repro.obs.report PATH")
+    ap.add_argument("--profile-dir", default="", metavar="DIR",
+                    help="with --trace: also wrap the run in "
+                         "jax.profiler.trace(DIR) for TensorBoard/Perfetto")
     return ap.parse_args()
 
 
@@ -114,7 +123,39 @@ def main():
                   async_buffer_size=args.buffer_size,
                   staleness_alpha=args.staleness_alpha,
                   latency_profile=args.latency_profile,
-                  async_flush_deadline=args.flush_deadline)
+                  async_flush_deadline=args.flush_deadline,
+                  telemetry=bool(args.trace))
+
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import Tracer
+        topo_name = ("population" if args.population > 0 else
+                     "async" if args.async_mode else
+                     "hier" if args.hierarchical else "star")
+        if args.population > 0 and args.async_mode:
+            topo_name = "population-async"
+        tracer = Tracer(args.trace, profile_dir=args.profile_dir,
+                        meta=dict(arch=args.arch, topology=topo_name,
+                                  rounds=args.rounds,
+                                  compressor=args.compressor,
+                                  algorithm=args.algorithm))
+
+    def _save_checkpoint(params):
+        if tracer is not None:
+            with tracer.span("checkpoint", path=args.checkpoint):
+                checkpoint.save(args.checkpoint, params)
+        else:
+            checkpoint.save(args.checkpoint, params)
+        print("saved", args.checkpoint)
+
+    def _emit_flush_events(ms):
+        # host-derived async flush marks: one event per flushed generation
+        if tracer is None or ms is None or "flushed" not in ms:
+            return
+        import numpy as np
+        for i, v in enumerate(np.asarray(ms["flushed"])):
+            if v > 0:
+                tracer.event("flush", round=i)
 
     if args.population > 0:
         # mesh-free streaming-cohort path (DESIGN.md §9): --population
@@ -147,14 +188,20 @@ def main():
               f"store={mb:.1f}MB params={model.param_count():,} "
               f"{'async' if args.async_mode else 'sync'}")
         state, ms = run_rounds(engine, state, data_fn, args.rounds,
-                               chunk=args.chunk)
+                               chunk=args.chunk, tracer=tracer)
         for i in range(args.rounds):
             led = jax.tree.map(lambda x, i=i: x[i], ms["ledger"])
             print(f"round {i:>4} loss={float(ms['loss'][i]):.3f} "
                   f"up={float(led.uplink_wire)/1e6:.2f}MB", flush=True)
+        if tracer is not None:
+            tracer.emit_rounds(ms, spec=engine.aux.get("telemetry"))
+            _emit_flush_events(ms)
         if args.checkpoint:
-            checkpoint.save(args.checkpoint, state.params)
-            print("saved", args.checkpoint)
+            _save_checkpoint(state.params)
+        if tracer is not None:
+            tracer.close()
+            print(f"trace: {args.trace} (render: python -m repro.obs.report "
+                  f"{args.trace})")
         return
 
     if args.async_mode:
@@ -178,7 +225,7 @@ def main():
               f"params={model.param_count():,}")
         state = a.init_fn(jax.random.PRNGKey(0))
         state, ms = run_rounds(a.engine, state, data_fn, args.rounds,
-                               chunk=args.chunk)
+                               chunk=args.chunk, tracer=tracer)
         for i in range(args.rounds):
             led = jax.tree.map(lambda x, i=i: x[i], ms["ledger"])
             print(f"event {i:>4} t={float(ms['clock'][i]):8.2f} "
@@ -186,9 +233,15 @@ def main():
                   f"tau={float(ms['staleness'][i]):>3.0f} "
                   f"loss={float(ms['loss'][i]):.3f} "
                   f"up={float(led.uplink_wire)/1e6:.2f}MB", flush=True)
+        if tracer is not None:
+            tracer.emit_rounds(ms, spec=a.engine.aux.get("telemetry"))
+            _emit_flush_events(ms)
         if args.checkpoint:
-            checkpoint.save(args.checkpoint, state.params)
-            print("saved", args.checkpoint)
+            _save_checkpoint(state.params)
+        if tracer is not None:
+            tracer.close()
+            print(f"trace: {args.trace} (render: python -m repro.obs.report "
+                  f"{args.trace})")
         return
 
     n = jax.device_count()
@@ -237,24 +290,41 @@ def main():
     # across eval windows (one compilation per chunk shape)
     chunk = max(1, args.chunk)
     runner = RoundRunner(step.engine, data_fn, chunk=chunk,
-                         metrics_fn=metrics_fn)
+                         metrics_fn=metrics_fn, tracer=tracer)
+    import contextlib
+    profile_cm = tracer.profile() if tracer is not None else \
+        contextlib.nullcontext()
     done = 0
-    while done < args.rounds:
-        k = min(chunk, args.rounds - done)
-        state, ms = runner.run(state, k)
-        for i in range(k):
-            led = jax.tree.map(lambda x, i=i: x[i], ms["ledger"])
-            print(f"round {done + i:>3} "
-                  f"loss={float(ms['loss'][i]):.3f} "
-                  f"up={float(led.uplink_wire)/1e6:.2f}MB "
-                  f"ratio={float(led.compression_ratio()):.1f}x", flush=True)
-            ev_loss = float(ms["eval_loss"][i])
-            if ev_loss == ev_loss:          # NaN on cadence-skipped rounds
-                print(f"eval@{done + i}: {ev_loss:.3f}", flush=True)
-        done += k
+    with profile_cm:
+        while done < args.rounds:
+            k = min(chunk, args.rounds - done)
+            state, ms = runner.run(state, k)
+            for i in range(k):
+                led = jax.tree.map(lambda x, i=i: x[i], ms["ledger"])
+                print(f"round {done + i:>3} "
+                      f"loss={float(ms['loss'][i]):.3f} "
+                      f"up={float(led.uplink_wire)/1e6:.2f}MB "
+                      f"ratio={float(led.compression_ratio()):.1f}x",
+                      flush=True)
+                ev_loss = float(ms["eval_loss"][i])
+                if ev_loss == ev_loss:      # NaN on cadence-skipped rounds
+                    print(f"eval@{done + i}: {ev_loss:.3f}", flush=True)
+                    if tracer is not None:
+                        tracer.event("eval", round=done + i, loss=ev_loss)
+            if tracer is not None:
+                # the stages naming record is written once, with the
+                # first chunk's rounds
+                tracer.emit_rounds(
+                    ms, spec=(step.engine.aux.get("telemetry")
+                              if done == 0 else None),
+                    start_round=done)
+            done += k
     if args.checkpoint:
-        checkpoint.save(args.checkpoint, global_params(state))
-        print("saved", args.checkpoint)
+        _save_checkpoint(global_params(state))
+    if tracer is not None:
+        tracer.close()
+        print(f"trace: {args.trace} (render: python -m repro.obs.report "
+              f"{args.trace})")
 
 
 if __name__ == "__main__":

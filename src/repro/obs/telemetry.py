@@ -1,0 +1,198 @@
+"""In-graph telemetry: the ``RoundStats`` pytree (DESIGN.md §12).
+
+One ``RoundStats`` rides next to the ``CommLedger`` in every round's metrics
+when ``FLConfig.telemetry`` is on.  Every leaf is fixed-shape f32, so the
+stats stack over the donated ``lax.scan`` exactly like the ledger and
+survive the eval-cadence ``lax.cond`` (``engine._gated_metrics``) as base
+metrics present in both branches.
+
+Per-stage byte attribution
+--------------------------
+``telemetry_spec`` decomposes a CommPipeline's static ``wire_bits`` into one
+slot per carrier stage (``pipeline.stage_sequence`` — wrappers like EF / DGC
+/ secagg / dpnoise bill through ``.inner`` and add no bytes of their own):
+stage ``i`` bills its ``meta_bits`` over the input length it sees
+(``pipeline.stage_input_lens``), and the final stage additionally bills the
+``32 * carrier_len`` payload floats — together exactly the pipeline's
+``wire_bits`` decomposition, summed over the model's leaves.
+
+In-graph, ``round_stats`` multiplies the static per-stage table by the
+round's unit (``n_sel`` selected clients, or 1 where the ledger already
+bills absolute totals) — except the LAST slot, which is constructed as the
+residual ``ledger_total - sum(previous slots)``.  That makes the slots sum
+to the ledger total *bit-exactly in f32 by construction* (pure
+per-slot multiplication would not: ``n * sum(t_i) != sum(n * t_i)`` in f32
+once totals cross 2^24), and lets one spec serve programs whose ledger
+varies across ``lax.cond`` branches (the hier cloud hop lands in the
+residual slot on cloud rounds and ~0 on edge rounds).
+
+Graph identity of the off path: every constructor here only reads values
+the round program already computed (weights, ledger, staleness, store
+masks) plus static python floats — nothing feeds back into params,
+comm_state, or the ledger, so telemetry on/off is bit-exact in all three
+(tests/test_obs.py, the differential harness).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.pipeline import stage_input_lens, stage_sequence
+
+# staleness histogram bucket edges (virtual versions): bucket i counts
+# tau in [edge_{i-1}, edge_i); the last bucket is tau >= 64
+STALENESS_EDGES = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
+N_STALENESS_BUCKETS = len(STALENESS_EDGES) + 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RoundStats:
+    """Fixed-shape f32 per-round telemetry (one per metrics row).
+
+    ``up_stage_bytes`` / ``down_stage_bytes`` carry one slot per pipeline
+    stage (names live OUT of the pytree, in the static ``TelemetrySpec``);
+    the slots sum exactly to ``CommLedger.uplink_wire`` /
+    ``downlink_wire``.  Scalars are 0 where a source doesn't exist on the
+    topology (no async_state -> zero staleness histogram, no store ->
+    zero counters)."""
+    up_stage_bytes: jax.Array          # (S_up,)  per-stage uplink bytes
+    down_stage_bytes: jax.Array        # (S_down,) per-stage downlink bytes
+    staleness_hist: jax.Array          # (N_STALENESS_BUCKETS,)
+    buffer_fill: jax.Array             # () async buffer occupancy at arrival
+    store_hits: jax.Array              # () ResidualStore gather hits
+    store_misses: jax.Array            # () gather misses
+    store_evictions: jax.Array         # () occupied slots the commit evicts
+    store_sketch_recovered: jax.Array  # () misses answered from the tail
+    selected: jax.Array                # () clients aggregated this round
+    available: jax.Array               # () cohort members available
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Static (per-engine) stage metadata: slot names and per-unit byte
+    tables.  Lives in ``RoundEngine.aux["telemetry"]``, never in the graph;
+    the tables anchor the in-graph residual construction and the HLO
+    cross-check (launch.hlo_analysis.name_stage_mismatch)."""
+    up_names: tuple
+    up_table: tuple                    # python floats, bytes per unit
+    down_names: tuple
+    down_table: tuple
+
+    def up_total(self) -> float:
+        return float(sum(self.up_table))
+
+    def down_total(self) -> float:
+        return float(sum(self.down_table))
+
+
+def stage_byte_table(pipe, sizes, scale: float = 1.0):
+    """Per-stage wire bytes for one unit (one client upload), summed over
+    the model's leaf sizes.  The decomposition mirrors ``Chain.meta_bits``
+    (each stage bills meta over its input length) plus the final stage's
+    ``32 * carrier_len`` payload, so the table sums to
+    ``scale * sum(pipe.wire_bits(n) for n in sizes) / 8`` up to float
+    summation order."""
+    stages = stage_sequence(pipe)
+    per = [0.0] * len(stages)
+    for n in sizes:
+        ms = stage_input_lens(stages, n)
+        for i, (s, m) in enumerate(zip(stages, ms)):
+            per[i] += s.meta_bits(m)
+        per[-1] += 32.0 * stages[-1].carrier_len(ms[-1])
+    return tuple(scale * b / 8.0 for b in per)
+
+
+def telemetry_spec(up, down, sizes, up_scale: float = 1.0,
+                   down_scale: float = 1.0, extra_up=()) -> TelemetrySpec:
+    """Build the static spec for an uplink/downlink pipeline pair.
+
+    ``extra_up`` appends named absolute-byte slots after the uplink stages
+    (the hier topology's cross-pod hop); the LAST up slot is the in-graph
+    residual anchor, so appended slots absorb ledger terms the stage table
+    doesn't cover."""
+    up_stages = stage_sequence(up)
+    up_names = tuple(s.name for s in up_stages)
+    up_table = stage_byte_table(up, sizes, up_scale)
+    for name, nbytes in extra_up:
+        up_names += (name,)
+        up_table += (float(nbytes),)
+    if down is not None:
+        down_names = tuple(s.name for s in stage_sequence(down))
+        down_table = stage_byte_table(down, sizes, down_scale)
+    else:
+        down_names, down_table = ("none",), (0.0,)
+    return TelemetrySpec(up_names, up_table, down_names, down_table)
+
+
+def staleness_hist(tau, weights=None) -> jax.Array:
+    """(N_STALENESS_BUCKETS,) f32 histogram of staleness values.  A scalar
+    ``tau`` (one async arrival) yields a one-hot; a vector (e.g. the
+    buffer's per-slot ``buf_tau``) with an occupancy-mask ``weights`` sums
+    per bucket."""
+    tau = jnp.atleast_1d(jnp.asarray(tau, jnp.float32))
+    w = jnp.ones_like(tau) if weights is None else \
+        jnp.asarray(weights, jnp.float32).reshape(tau.shape)
+    edges = jnp.asarray(STALENESS_EDGES, jnp.float32)
+    idx = (tau[:, None] >= edges[None, :]).sum(axis=1)
+    return jnp.zeros((N_STALENESS_BUCKETS,), jnp.float32).at[idx].add(w)
+
+
+def _residual_slots(table, unit, total) -> jax.Array:
+    """Stage slots: ``unit * table[i]`` for every slot but the last; the
+    last is ``total - sum(previous)``, so the reconstruction
+    ``sum(previous) + last == total`` holds bit-exactly in f32."""
+    unit = jnp.asarray(unit, jnp.float32)
+    parts = [unit * jnp.float32(t) for t in table[:-1]]
+    partial = jnp.float32(0.0)
+    for p in parts:
+        partial = partial + p
+    parts.append(jnp.asarray(total, jnp.float32) - partial)
+    return jnp.stack(parts)
+
+
+def round_stats(spec: TelemetrySpec, ledger, *, up_unit, down_unit=None,
+                staleness=None, staleness_weights=None, fill=None,
+                store=None, selected=None, available=None) -> RoundStats:
+    """Assemble one round's ``RoundStats`` from already-computed values.
+
+    ``up_unit`` multiplies the per-unit stage table (``n_sel`` on the
+    server topologies, 1.0 where the ledger is already absolute);
+    ``down_unit`` defaults to ``up_unit``.  ``store`` is the dict
+    ``ResidualStore.stats`` returns.  Everything absent defaults to 0."""
+    z = jnp.zeros((), jnp.float32)
+    f = lambda v: z if v is None else jnp.asarray(v, jnp.float32)
+    store = store or {}
+    hist = (jnp.zeros((N_STALENESS_BUCKETS,), jnp.float32)
+            if staleness is None
+            else staleness_hist(staleness, staleness_weights))
+    return RoundStats(
+        up_stage_bytes=_residual_slots(spec.up_table, up_unit,
+                                       ledger.uplink_wire),
+        down_stage_bytes=_residual_slots(
+            spec.down_table, up_unit if down_unit is None else down_unit,
+            ledger.downlink_wire),
+        staleness_hist=hist,
+        buffer_fill=f(fill),
+        store_hits=f(store.get("hits")),
+        store_misses=f(store.get("misses")),
+        store_evictions=f(store.get("evictions")),
+        store_sketch_recovered=f(store.get("sketch_recovered")),
+        selected=f(selected),
+        available=f(available),
+    )
+
+
+def zero_stats(spec: TelemetrySpec) -> RoundStats:
+    """An all-zero RoundStats with ``spec``'s slot shapes (structure
+    template for cond branches and tests)."""
+    z = jnp.zeros((), jnp.float32)
+    return RoundStats(
+        up_stage_bytes=jnp.zeros((len(spec.up_table),), jnp.float32),
+        down_stage_bytes=jnp.zeros((len(spec.down_table),), jnp.float32),
+        staleness_hist=jnp.zeros((N_STALENESS_BUCKETS,), jnp.float32),
+        buffer_fill=z, store_hits=z, store_misses=z, store_evictions=z,
+        store_sketch_recovered=z, selected=z, available=z,
+    )

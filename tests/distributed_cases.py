@@ -551,6 +551,84 @@ def case_secagg_masked_bitexact():
     print("case_secagg_masked_bitexact OK")
 
 
+def case_telemetry_bitexact():
+    """Flight-recorder differential on the multi-device wires (DESIGN.md
+    §12): telemetry on vs off is bit-exact in params, comm_state, and
+    ledger on the star shard_map wire, the hier two-level program, and the
+    gossip mix — and the per-stage byte slots reconstruct the ledger wire
+    totals exactly in f32 (residual construction).  On hier, ONE
+    TelemetrySpec serves both ``lax.cond`` branches: the appended pod slot
+    is the residual anchor, landing exactly 0 on edge rounds and exactly
+    the cross-pod bytes on cloud rounds."""
+    from repro.core.engine import Topology, make_round_engine, run_rounds
+
+    cfg = tiny_cfg()
+    model = Model(cfg)
+
+    def _eq(tag, a, b):
+        la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+        assert len(la) == len(lb), tag
+        for x, y in zip(la, lb):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), tag
+
+    def _residual_exact(slots, totals):
+        for i in range(slots.shape[0]):
+            partial = np.float32(0.0)
+            for v in slots[i][:-1]:
+                partial = np.float32(partial + np.float32(v))
+            assert slots[i][-1] == np.float32(
+                np.float32(totals[i]) - partial), (i, slots[i], totals[i])
+
+    def pair(tag, topo_fn, mesh, data_fn, spec, n=4, **fl_kw):
+        fl_kw.setdefault("local_lr", 0.2)
+        outs = []
+        for tele in (False, True):
+            fl = FLConfig(algorithm="fedavg", local_steps=1,
+                          uplink_compressor=spec, telemetry=tele, **fl_kw)
+            e = make_round_engine(model, fl, topo_fn(), mesh=mesh, chunk=16)
+            st = e.init_fn(jax.random.PRNGKey(0))
+            st, ms = run_rounds(e, st, data_fn, n, chunk=2, donate=False)
+            outs.append((st, ms))
+        (so, mo), (st_, mt) = outs
+        _eq(f"{tag} params", so.params, st_.params)
+        _eq(f"{tag} comm_state", so.comm_state, st_.comm_state)
+        _eq(f"{tag} ledger", mo["ledger"], mt["ledger"])
+        assert "round_stats" not in mo and "round_stats" in mt, tag
+        rs = mt["round_stats"]
+        _residual_exact(np.asarray(rs.up_stage_bytes),
+                        np.asarray(mt["ledger"].uplink_wire))
+        _residual_exact(np.asarray(rs.down_stage_bytes),
+                        np.asarray(mt["ledger"].downlink_wire))
+        return mt
+
+    # --- star shard_map wire ------------------------------------------------
+    mesh = mesh2()
+
+    def star_data(r):
+        return make_batch(cfg, 4, 2, 16,
+                          jax.random.fold_in(jax.random.PRNGKey(1), r))
+
+    pair("star", Topology.star, mesh, star_data, "topk:0.25>>qsgd:8")
+    print("  star OK")
+
+    # --- hier two-level program ---------------------------------------------
+    m3 = mesh3()
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 2, 2, 16), 0, 96)
+    hbatch = {"tokens": t, "labels": t, "mask": jnp.ones((2, 2, 2, 16))}
+    mt = pair("hier", lambda: Topology.hier(2), m3, lambda r: hbatch,
+              "qsgd8", pod_compressor="qsgd8")
+    pod = np.asarray(mt["round_stats"].up_stage_bytes)[:, -1]
+    assert pod[0] == 0.0 and pod[2] == 0.0, pod      # edge rounds
+    assert pod[1] > 0.0 and pod[1] == pod[3], pod    # cloud rounds
+    print("  hier OK (pod slot", pod.tolist(), ")")
+
+    # --- gossip mix -----------------------------------------------------------
+    gb = {"tokens": t[0], "labels": t[0], "mask": jnp.ones((2, 2, 16))}
+    pair("gossip", Topology.gossip, m3, lambda r: gb, "qsgd8",
+         local_lr=0.01)
+    print("case_telemetry_bitexact OK")
+
+
 CASES = {k[5:]: v for k, v in list(globals().items())
          if k.startswith("case_")}
 

@@ -23,6 +23,7 @@ CASES = [
     "compressed_agg_collectives_in_hlo",
     "population_star_bitexact",
     "secagg_masked_bitexact",
+    "telemetry_bitexact",
 ]
 
 

@@ -114,6 +114,53 @@ def test_doc_only_suite_is_registered(doc, suite):
 
 
 # ---------------------------------------------------------------------------
+# observability flags (DESIGN.md §12): docs advertise `--trace` /
+# `--profile-dir` on repro.launch.train; those flags must exist in the
+# argparse source, and the docs must actually quote them
+# ---------------------------------------------------------------------------
+
+_FLAG = re.compile(r"add_argument\(\s*\"(--[a-z][a-z0-9-]*)\"")
+
+
+def _train_flags():
+    """Long flags out of launch/train.py's argparse, by source scan — the
+    module's main() builds the parser lazily, so import alone won't do."""
+    path = os.path.join(ROOT, "src", "repro", "launch", "train.py")
+    with open(path) as fh:
+        return set(_FLAG.findall(fh.read()))
+
+
+def _doc_train_flags():
+    """Every `--flag` quoted in a doc line that mentions the train CLI."""
+    refs = []
+    for doc in DOCS:
+        with open(os.path.join(ROOT, doc)) as fh:
+            for line in fh:
+                if "repro.launch.train" not in line:
+                    continue
+                for flag in re.findall(r"--[a-z][a-z0-9-]*", line):
+                    refs.append(pytest.param(doc, flag,
+                                             id=f"{doc}:{flag}"))
+    return refs
+
+
+def test_docs_quote_the_obs_flags():
+    """The Observability quickstart must actually advertise the flight
+    recorder: `--trace` and `--profile-dir` each quoted by >= 1 doc."""
+    quoted = {flag for p in _doc_train_flags() for _, flag in [p.values]}
+    assert "--trace" in quoted and "--profile-dir" in quoted, quoted
+
+
+@pytest.mark.parametrize("doc,flag", _doc_train_flags())
+def test_doc_train_flag_exists(doc, flag):
+    """A doc advertising a train-CLI flag that was renamed or removed rots
+    in a reader's shell; fail here against the argparse source."""
+    assert flag in _train_flags(), (
+        f"{doc} quotes train flag {flag!r}; "
+        f"defined: {sorted(_train_flags())}")
+
+
+# ---------------------------------------------------------------------------
 # privacy grammar (DESIGN.md §11): EXPERIMENTS §Privacy quotes secagg /
 # dpnoise specs; they must build, and the unmaskable combination must fail
 # with an error that names the fix
