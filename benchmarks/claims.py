@@ -55,23 +55,56 @@ REGISTRY: tuple[Claim, ...] = (
           "On the heterogeneous-quadratic drift construction of [46], "
           "SCAFFOLD lands >=100x closer to the true optimum than FedAvg."),
     # --- selection (§III.B.2) ---------------------------------------------
+    # nightly tier (smoke=False): the bench pins every rng (data seed 0-2,
+    # init PRNGKey(seed), selection keys from the engine's fold_in
+    # schedule), so run-to-run variance comes only from averaging 3 fixed
+    # seeds — the +0.02 band absorbs the residual spread at 25 rounds
     Claim("selection/claim_poc_beats_random", "selection",
           _cmd("selection"),
-          "mean final loss over 3 seeds: poc <= random + 0.02",
+          "mean final loss over 3 fixed seeds (0,1,2): "
+          "poc <= random + 0.02",
           "Power-of-Choice matches or beats random client selection at the "
           "same cohort size.", smoke=False),
     # --- async (§III.B / DESIGN.md §7-8) ----------------------------------
+    # nightly tier: seeds pinned (init PRNGKey(0), data PRNGKey(1),
+    # latency PRNGKey(13) per round), so the virtual-clock race is
+    # deterministic per machine; the margin-free strict inequality held
+    # at ~2.4x in the recorded runs — a flip is a real regression
     Claim("async/claim_fedbuff_beats_sync_time_to_target", "async",
           _cmd("async"),
-          "best count-flush K strictly faster (virtual clock) than sync",
+          "best count-flush K strictly faster (virtual clock) than sync; "
+          "fixed seeds, measured margin ~2.4x at 25 rounds",
           "FedBuff reaches the shared target loss in less virtual "
           "wall-clock than sync FedAvg under heavy-tail stragglers.",
           smoke=False),
     Claim("async/claim_deadline_flush_vs_k_flush", "async",
           _cmd("async"),
-          "deadline-flush vclock <= 1.25 x best count-flush K",
+          "deadline-flush vclock <= 1.25 x best count-flush K "
+          "(fixed seeds; the 25% band absorbs flush-phase alignment)",
           "Adaptive (deadline) buffer flushing is competitive with the "
           "best hand-tuned buffer size K.", smoke=False),
+    # --- scenario pack (DESIGN.md §13) ------------------------------------
+    Claim("scenario/claim_trace_duty_cycle", "scenario",
+          _cmd("scenario") + "   # CI: --smoke",
+          "square: |duty - rate| <= 1/period (exact windows); "
+          "diurnal: |mean duty - rate| <= 0.06 over 80 rounds x 64 clients",
+          "The availability traces hit their configured duty cycle: "
+          "square exactly per period, diurnal in time-average (the "
+          "sinusoid amplitude clamp keeps the mean at the rate)."),
+    Claim("scenario/claim_adaptive_deadline_converges", "scenario",
+          _cmd("scenario") + "   # CI: --smoke",
+          "|q_est - 1.0| < 0.5 on the constant-latency profile "
+          "(oscillation ~ eta * q = 5%)",
+          "The Robbins-Monro completion-time quantile tracker the async "
+          "engine arms deadlines from converges to the observed "
+          "completion time."),
+    Claim("scenario/claim_fedbuff_beats_sync_under_dynamics", "scenario",
+          _cmd("scenario"),
+          "fedbuff(dropout+adaptive) strictly faster (virtual clock) than "
+          "sync(diurnal 0.7 + dropout); fixed seeds",
+          "The async headline claim survives realistic client dynamics: "
+          "FedBuff still beats sync FedAvg to the shared target when "
+          "both run under the scenario pack's dynamics.", smoke=False),
     # --- scale (DESIGN.md §9) ---------------------------------------------
     Claim("scale/claim_memory_flat_in_population", "scale",
           _cmd("scale") + "   # CI: --smoke",
@@ -166,3 +199,11 @@ def smoke_suites() -> list[str]:
     ``holds=`` verdicts at emit time (benchmarks/run.py), so rechecking
     such a suite gates only on its deterministic claims."""
     return sorted({c.suite for c in REGISTRY if c.smoke})
+
+
+def nightly_suites() -> list[str]:
+    """Suites with at least one ``smoke=False`` claim — the budgeted
+    ``claims-nightly`` CI job re-runs exactly these WITHOUT ``--smoke``
+    (full rounds), so the seed-pinned convergence races get their
+    ``holds=`` verdicts re-measured on a schedule instead of per-push."""
+    return sorted({c.suite for c in REGISTRY if not c.smoke})

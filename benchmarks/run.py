@@ -19,6 +19,10 @@ Output: ``name,us_per_call,derived`` CSV (one row per configuration).
   roofline         §Dry-run  per-arch roofline terms (reads experiments/)
   privacy          DESIGN.md §11  secagg masking bit-exactness + dpnoise
                    privacy/bytes/accuracy Pareto sweep
+  scenario         DESIGN.md §13  client-dynamics scenario pack: trace duty
+                   cycles, adaptive deadline convergence, and the
+                   sync-vs-FedBuff race under diurnal availability +
+                   mid-round dropout
 
 Every ``holds=`` row emitted here must be registered in
 ``benchmarks/claims.py`` (id + reproduce + tolerance); ``_check_trajectory``
@@ -1132,6 +1136,129 @@ def bench_obs(rounds):
                     and len(records) > r and len(report) > 0))
 
 
+def bench_scenario(rounds):
+    """Client-dynamics scenario pack (core.scenario, DESIGN.md §13): the
+    realistic-conditions re-measurement of the async headline claims.
+
+    Three legs: (a) trace duty-cycle fidelity — the square/diurnal traces
+    hit their configured duty exactly / in mean (deterministic, smoke-
+    checkable); (b) adaptive deadline arming — the completion-time
+    quantile tracker converges on the constant-latency profile
+    (deterministic); (c) the sync-vs-FedBuff time-to-target race re-run
+    under diurnal availability + mid-round dropout on the sync leg and
+    dropout + adaptive deadline on the async leg (seed-pinned,
+    smoke=False — nightly tier).  The dynamics are topology-honest:
+    availability traces only exist on the synchronous selection hop (the
+    async engine rejects them), so the race compares each topology under
+    the dynamics it can express."""
+    from repro.core import scenario as scn
+    from repro.core.async_engine import make_async_step
+    from repro.data.pipeline import device_latency
+
+    # --- leg a: trace duty cycles (deterministic) --------------------------
+    period, n_r = 8.0, 80
+    ids = jnp.arange(64, dtype=jnp.int32)
+    duty_ok = True
+    for trace, rate in (("square", 0.25), ("square", 0.75),
+                        ("diurnal", 0.5)):
+        s = scn.Scenario(trace=trace, period=period, availability=rate,
+                         seed=0)
+        masks = np.stack([np.asarray(scn.availability_mask(
+            s, 0, rate, jnp.int32(r), ids)) for r in range(n_r)])
+        err = abs(float(masks.mean()) - rate)
+        tol = 1.0 / period if trace == "square" else 0.06
+        duty_ok = duty_ok and err <= tol
+        emit(f"scenario/duty/{trace}_{rate}", 0.0, rate=rate,
+             measured=round(float(masks.mean()), 4), err=round(err, 4),
+             tol=tol)
+    emit("scenario/claim_trace_duty_cycle", 0.0, holds=bool(duty_ok),
+         period=period, rounds=n_r)
+
+    # --- leg b: adaptive deadline quantile convergence (deterministic) -----
+    cfg = get_arch("paper_lm")
+    model = Model(cfg)
+    clients = 8
+    dcfg = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=clients,
+                         seq_len=48, batch_per_client=4, heterogeneity=2.0,
+                         seed=0)
+
+    def data_fn(r):
+        return sample_round(dcfg, jax.random.fold_in(jax.random.PRNGKey(1),
+                                                     r))
+
+    n_ev = clients * (4 if SMOKE else max(8, rounds))
+    fl_q = FLConfig(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                    uplink_compressor="qsgd8",
+                    scenario_deadline_quantile=0.5)
+    a = make_async_step(model, fl_q, clients, data_fn, buffer_size=clients,
+                        latency_profile="constant", chunk=48)
+    state = a.init_fn(jax.random.PRNGKey(0))
+    state, ms = run_rounds(a.engine, state, data_fn, n_ev, chunk=16)
+    q = np.asarray(ms["q_est"], np.float64)
+    # constant profile: every completion takes exactly 1.0 virtual seconds
+    q_err = abs(float(q[-1]) - 1.0)
+    emit("scenario/claim_adaptive_deadline_converges", 0.0,
+         holds=bool(q_err < 0.5), q_final=round(float(q[-1]), 3),
+         true_latency=1.0, events=n_ev)
+
+    # --- leg c: the async race under realistic dynamics (nightly) ----------
+    base = dict(algorithm="fedavg", local_steps=2, local_lr=0.2,
+                uplink_compressor="qsgd8")
+    dyn_sync = dict(scenario_trace="diurnal", scenario_availability=0.7,
+                    scenario_dropout=0.1, scenario_period=8.0)
+    dyn_async = dict(scenario_dropout=0.1,
+                     scenario_deadline_quantile=0.75)
+    ev = eval_batch(dcfg, jax.random.PRNGKey(99), batch_size=8)
+
+    def metrics_fn(state, m):
+        return dict(m, eval_loss=model.loss(state.params, ev, chunk=48)[0])
+
+    # sync leg: barrier per round under diurnal availability + dropout
+    losses, bytes_cum, us = _fl_run(FLConfig(**base, **dyn_sync), rounds)
+    resources = sample_round(dcfg, jax.random.PRNGKey(7))["resources"]
+    t, sync_t = 0.0, []
+    for r in range(rounds):
+        lat = device_latency("heavy_tail", resources,
+                             jax.random.fold_in(jax.random.PRNGKey(13), r))
+        t += float(jnp.max(lat))
+        sync_t.append(t)
+    emit("scenario/sync_diurnal_dropout", us,
+         loss_final=round(losses[-1], 4),
+         mb=round(bytes_cum[-1] / 1e6, 2), vclock=round(sync_t[-1], 1))
+
+    # async leg: FedBuff under dropout + adaptive deadline arming
+    n_events = rounds * clients
+    fl_a = FLConfig(**base, **dyn_async)
+    a = make_async_step(model, fl_a, clients, data_fn, buffer_size=4,
+                        staleness_alpha=0.5, latency_profile="heavy_tail",
+                        chunk=48)
+    state = a.init_fn(jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
+    state, ms = run_rounds(a.engine, state, data_fn, n_events, chunk=16,
+                           metrics_fn=metrics_fn, eval_every=clients)
+    jax.block_until_ready(ms["clock"])
+    us = (time.perf_counter() - t0) / n_events * 1e6
+    evl = np.asarray(ms["eval_loss"], np.float64)
+    clock = np.asarray(ms["clock"], np.float64)
+    keep = np.isfinite(evl)
+    evl, clock = evl[keep], clock[keep]
+    emit("scenario/fedbuff_dropout_adaptive", us,
+         loss_final=round(float(evl[-1]), 4),
+         vclock=round(float(clock[-1]), 1),
+         q_final=round(float(np.asarray(ms["q_est"])[-1]), 2))
+
+    # time-to-target on the shared bar (same construction as bench_async)
+    target = max(losses[-1], float(evl[-1])) + 0.02
+    s_idx = next((i for i, x in enumerate(losses) if x <= target), None)
+    a_idx = next((i for i, x in enumerate(evl) if x <= target), None)
+    t_sync = sync_t[s_idx] if s_idx is not None else float("inf")
+    t_async = float(clock[a_idx]) if a_idx is not None else float("inf")
+    emit("scenario/claim_fedbuff_beats_sync_under_dynamics", 0.0,
+         holds=bool(t_async < t_sync), target=round(target, 3),
+         fedbuff_vclock=round(t_async, 1), sync_vclock=round(t_sync, 1),
+         note="diurnal+dropout-sync-vs-dropout+adaptive-fedbuff")
+
+
 BENCHES = {
     "compression": bench_compression,
     "kernels": bench_kernels,
@@ -1148,6 +1275,7 @@ BENCHES = {
     "fused": bench_fused,
     "privacy": bench_privacy,
     "obs": bench_obs,
+    "scenario": bench_scenario,
 }
 
 
@@ -1176,7 +1304,7 @@ def _write_bench_json(path: str, args) -> None:
         d = dict(kv.split("=", 1) for kv in derived.split(";") if "=" in kv)
         rows.append({"name": name, "us_per_call": float(us), "derived": d})
     payload = {
-        "pr": 9,
+        "pr": 10,
         "git_sha": sha,
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,

@@ -83,6 +83,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import scenario as scn_mod
 from repro.core import server_opt
 from repro.core.aggregation import comm_state_init
 from repro.core.types import CommLedger, FLConfig, FLState
@@ -158,6 +159,25 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
             f"population.n_clients ({population.n_clients}) must match "
             f"Topology.async_(n_clients={topo.n_clients})")
 
+    # scenario dynamics (core.scenario, DESIGN.md §13): the async engine
+    # takes mid-round dropout (survival draw per arrival), epoch scaling
+    # (via the shared dispatch body), and adaptive deadline arming.
+    # Availability traces act on the synchronous selection hop, which the
+    # async topology replaces with completion order — reject rather than
+    # silently ignore the knob.
+    scenario = eng._fl_scenario(fl)
+    if scenario is not None and scenario.availability_on:
+        raise ValueError(
+            "async topology replaces client selection with completion "
+            "order, so scenario availability traces have no hop to mask — "
+            "use scenario_trace='static' / scenario_availability=1.0 (the "
+            "dropout / epoch-scale / deadline-quantile knobs all apply)")
+    adaptive = scenario is not None and scenario.deadline_quantile > 0.0
+    scn_drop = scenario is not None and scenario.dropout > 0.0
+    # the popped slot's in-flight duration, needed by both the survival
+    # draw and the completion-time quantile tracker
+    need_lat = adaptive or scn_drop
+
     C = topo.n_clients
     # M: the in-flight slot count — every per-slot vector below is (M,).
     # Dense build: one slot per client.  Population build: one per cohort
@@ -172,7 +192,8 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
     # THE tentpole contract: this is the synchronous engine's dispatch body
     # (downlink >> local-update vmap >> wire-boundary barrier >> CommPipeline
     # encode/decode >> row aggregation), not a copy of it — DESIGN.md §8
-    dispatch = eng.make_dispatch(model, fl, up, down, M, chunk)
+    dispatch = eng.make_dispatch(model, fl, up, down, M, chunk,
+                                 scenario=scenario)
 
     def init_fn(rng):
         params = model.init(rng)
@@ -204,6 +225,17 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
             "next_deadline": jnp.float32(deadline if deadline > 0
                                          else jnp.inf),
         }
+        if need_lat:
+            # in-flight duration per slot: the survival draw's exposure
+            # time and the quantile tracker's observation (core.scenario).
+            # +0.0 forces a distinct buffer from next_done — both are
+            # donated scan carries, and XLA rejects double donation
+            A["slot_lat"] = lat + 0.0
+        if adaptive:
+            A["q_est"] = scn_mod.quantile_init(lat)
+            # distinct buffer: q_est and next_deadline are both donated
+            # scan carries, and XLA rejects donating one buffer twice
+            A["next_deadline"] = A["q_est"] + 0.0
         if stateful:
             A["pending_comm"] = pending
         if population is not None:
@@ -240,7 +272,27 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
         st, A = ctx["state"], ctx["state"].async_state
         A2 = dict(A)
         A2["next_done"] = jnp.where(ctx["onehot"], _INF, A["next_done"])
-        A2["buf_w"] = jnp.where(ctx["onehot"], ctx["stale_w"], A["buf_w"])
+        if scn_drop:
+            # mid-round dropout (DESIGN.md §13): one survival coin per
+            # arrival event, exposure = the slot's in-flight duration.  A
+            # dropped client's payload still arrives (shapes never change)
+            # but lands with zero aggregation weight — the same partial-
+            # update semantics as the sync engines' zero-weight rows.
+            cid = (A["slot_client"][ctx["c"]] if population is not None
+                   else ctx["c"])
+            survive = scn_mod.survival_draw(scenario, st.round, cid,
+                                            A["slot_lat"][ctx["c"]])
+            ctx["scn_dropped"] = 1.0 - survive
+            w_in = ctx["stale_w"] * survive
+        else:
+            w_in = ctx["stale_w"]
+        if adaptive:
+            # completion-time quantile tracker: one Robbins-Monro step per
+            # observed arrival duration (scenario.quantile_update)
+            A2["q_est"] = scn_mod.quantile_update(
+                A["q_est"], A["slot_lat"][ctx["c"]],
+                scenario.deadline_quantile)
+        A2["buf_w"] = jnp.where(ctx["onehot"], w_in, A["buf_w"])
         A2["buf_tau"] = jnp.where(ctx["onehot"],
                                   ctx["tau"].astype(jnp.float32),
                                   A["buf_tau"])
@@ -339,9 +391,16 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
                 buf_tau=jnp.where(mb, 0.0, A["buf_tau"]),
                 losses=jnp.where(mb, losses, A["losses"]),
                 server_version=new_ver,
-                next_deadline=(ctx["clock"] + jnp.float32(deadline)
-                               if deadline > 0 else A["next_deadline"]),
+                # adaptive arming (DESIGN.md §13): the next flush deadline
+                # is the current completion-time quantile estimate, not a
+                # fixed knob — the deadline tracks the stragglers
+                next_deadline=(ctx["clock"] + A["q_est"] if adaptive
+                               else (ctx["clock"] + jnp.float32(deadline)
+                                     if deadline > 0
+                                     else A["next_deadline"])),
             )
+            if need_lat:
+                A3["slot_lat"] = jnp.where(mb, lat, A["slot_lat"])
             if stateful:
                 A3["pending_comm"] = tuple(
                     jax.tree.map(_merge(mb), pending[li],
@@ -361,7 +420,7 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
                     comm)
 
         fire = ctx["fill"] >= K
-        if deadline > 0:
+        if deadline > 0 or adaptive:
             fire = fire | (ctx["clock"] >= A["next_deadline"])
         (params, sos, A3, rng, loss, n_down, flushed, comm_out) = \
             jax.lax.cond(fire, flush, wait, None)
@@ -404,7 +463,8 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
             down_unit=ctx["n_down"],
             staleness=ctx["tau"].astype(jnp.float32),
             fill=ctx["fill"].astype(jnp.float32), store=ctrs,
-            selected=jnp.float32(1.0), available=jnp.float32(M))
+            selected=jnp.float32(1.0), available=jnp.float32(M),
+            dropped=ctx.get("scn_dropped"))
         return ctx
 
     def hop_finalize(ctx):
@@ -419,6 +479,8 @@ def build_async_engine(model: Model, fl: FLConfig, topo, data_fn,
             "flushed": ctx["flushed"],
             "ledger": ctx["ledger"],
         }
+        if adaptive:
+            ctx["metrics"]["q_est"] = ctx["A"]["q_est"]
         if tele is not None:
             ctx["metrics"]["round_stats"] = ctx["round_stats"]
         ctx["new_state"] = FLState(

@@ -48,9 +48,11 @@ from repro.compress.secure_agg import (DPNoise, MASK_TAG, SecAgg,
                                        bind_n_leaves, has_mask_ctx,
                                        inject_mask_ctx)
 from repro.core import aggregation, selection as sel, server_opt
+from repro.core import scenario as scn_mod
 from repro.core.aggregation import comm_state_init, comm_state_specs
 from repro.core.compat import shard_map
 from repro.core.types import CommLedger, FLConfig, FLState
+from repro.data.pipeline import capability_latency
 from repro.models import sharding as shd
 from repro.models.model import Model
 from repro.obs import telemetry as obs_tel
@@ -398,11 +400,17 @@ def _make_ledger(terms: dict, n_sel) -> CommLedger:
 # ---------------------------------------------------------------------------
 
 def _client_update(model: Model, fl: FLConfig, params, batch_c, rng,
-                   control, c_i, chunk, global_grad=None):
+                   control, c_i, chunk, global_grad=None, n_steps=None):
     """One client's local training. Returns (delta, mean_loss, first_loss,
     new_c_i). For ``feddane`` [49], ``global_grad`` is the aggregated
     gradient at the global params; the local steps use the DANE-corrected
-    gradient g_i(w') + (g(w) − g_i(w)) + mu·(w' − w)."""
+    gradient g_i(w') + (g(w) − g_i(w)) + mu·(w' − w).
+
+    ``n_steps`` (scalar int32, scenario epoch scaling) truncates the local
+    solve to the first ``n_steps`` of the ``local_steps`` scan iterations:
+    the scan keeps its static length (shape discipline) and later steps
+    freeze the client params behind a ``jnp.where`` — same per-step
+    arithmetic, statically absent when ``n_steps is None``."""
     E, lr = fl.local_steps, fl.local_lr
     loss_fn = lambda p: model.loss(p, batch_c, chunk=chunk)[0]
 
@@ -438,7 +446,20 @@ def _client_update(model: Model, fl: FLConfig, params, batch_c, rng,
                                           ).astype(a.dtype), p_c, g)
         return p_c, loss
 
-    p_fin, losses = jax.lax.scan(step, params, None, length=E)
+    if n_steps is None:
+        p_fin, losses = jax.lax.scan(step, params, None, length=E)
+        mean_loss = losses.mean()
+    else:
+        def gated(p_c, j):
+            p_new, loss = step(p_c, None)
+            active = j < n_steps
+            p_c = jax.tree.map(
+                lambda old, new: jnp.where(active, new, old), p_c, p_new)
+            return p_c, jnp.where(active, loss, 0.0)
+        p_fin, losses = jax.lax.scan(gated, params, jnp.arange(E))
+        # n_steps >= 1 always (scenario.epoch_steps floors it), so step 0
+        # is active and losses[0] stays the selection hop's first loss
+        mean_loss = losses.sum() / n_steps.astype(jnp.float32)
     delta = jax.tree.map(
         lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32))
         .astype(ddt), p_fin, params)
@@ -446,7 +467,7 @@ def _client_update(model: Model, fl: FLConfig, params, batch_c, rng,
     if fl.algorithm == "scaffold":
         new_c_i = jax.tree.map(
             lambda ci, c, d: ci - c - d / (E * lr), c_i, control, delta)
-    return delta, losses.mean(), losses[0], new_c_i
+    return delta, mean_loss, losses[0], new_c_i
 
 
 # ---------------------------------------------------------------------------
@@ -477,13 +498,19 @@ class Dispatch:
         barrier pins both to the same materialization, DESIGN.md §7/§8).
 
     ``__call__`` composes the first three — the AsyncEngine's whole
-    per-generation computation."""
+    per-generation computation.
+
+    ``epoch_steps(batch) -> (n_steps, scale)`` (scenario epoch scaling,
+    DESIGN.md §13) is attached only when the scenario enables it — every
+    caller gates on ``epoch_steps is not None`` at build time, so the OFF
+    graph is byte-identical to a dispatch built without a scenario."""
 
     downlink: Callable
     local_update: Callable
     wire_rows: Callable
     aggregate_rows: Callable
     n_clients: int
+    epoch_steps: Optional[Callable] = None
 
     @staticmethod
     def model_batch(batch) -> dict:
@@ -493,16 +520,26 @@ class Dispatch:
 
     def __call__(self, params, batch, comm_state, k_loc, k_down, k_up):
         params = self.downlink(params, k_down)
-        deltas, losses, _ = self.local_update(params,
-                                              self.model_batch(batch), k_loc)
+        if self.epoch_steps is not None:
+            n_steps, _ = self.epoch_steps(batch)
+            deltas, losses, _ = self.local_update(
+                params, self.model_batch(batch), k_loc, n_steps)
+        else:
+            deltas, losses, _ = self.local_update(
+                params, self.model_batch(batch), k_loc)
         rows, new_comm = self.wire_rows(deltas, comm_state, k_up)
         return rows, losses, new_comm
 
 
 def make_dispatch(model: Model, fl: FLConfig, up, down, C: int,
-                  chunk: int) -> Dispatch:
+                  chunk: int, scenario=None) -> Dispatch:
     """Build the shared dispatch body for one (model, fl) binding over ``C``
-    vmapped clients with uplink pipeline ``up`` / downlink ``down``."""
+    vmapped clients with uplink pipeline ``up`` / downlink ``down``.
+    ``scenario`` (a :class:`repro.core.scenario.Scenario`) with
+    ``epoch_scale > 0`` attaches the heterogeneity-aware per-client
+    local-step budget; any other scenario knob leaves the dispatch body
+    untouched (availability/dropout act on aggregation weights in the
+    round programs)."""
     stateful = up.stateful
     masked = has_mask_ctx(up)
 
@@ -514,12 +551,35 @@ def make_dispatch(model: Model, fl: FLConfig, up, down, C: int,
                                      p.reshape(-1).astype(jnp.float32))
             .reshape(p.shape).astype(p.dtype), params)
 
-    def local_update(params, model_batch, k_loc):
+    def local_update(params, model_batch, k_loc, n_steps=None):
         rngs = jax.random.split(k_loc, C)
-        deltas, losses, first_losses, _ = jax.vmap(
-            lambda b, r: _client_update(model, fl, params, b, r,
-                                        None, None, chunk))(model_batch, rngs)
+        if n_steps is None:
+            deltas, losses, first_losses, _ = jax.vmap(
+                lambda b, r: _client_update(
+                    model, fl, params, b, r, None, None,
+                    chunk))(model_batch, rngs)
+        else:
+            deltas, losses, first_losses, _ = jax.vmap(
+                lambda b, r, ns: _client_update(
+                    model, fl, params, b, r, None, None, chunk,
+                    n_steps=ns))(model_batch, rngs, n_steps)
         return deltas, losses, first_losses
+
+    epoch_steps = None
+    if scenario is not None and scenario.epoch_scale > 0.0:
+        if fl.local_steps <= 1:
+            raise ValueError(
+                "scenario epoch scaling needs local_steps > 1 — there is "
+                "no per-client budget to truncate at a single local step")
+        if fl.algorithm not in ("fedavg", "fedsgd", "fedprox"):
+            raise ValueError(
+                f"scenario epoch scaling truncates the local scan per "
+                f"client — the {fl.algorithm!r} control-variate bookkeeping "
+                f"assumes a fixed step count; use fedavg/fedsgd/fedprox")
+
+        def epoch_steps(batch):
+            res = batch.get("resources", jnp.ones((C, 4), jnp.float32))
+            return scn_mod.epoch_steps(scenario, fl.local_steps, res)
 
     def wire_rows(deltas, comm_state, k_up):
         # The wire boundary: materialize the client deltas BEFORE encoding —
@@ -578,7 +638,7 @@ def make_dispatch(model: Model, fl: FLConfig, up, down, C: int,
 
     return Dispatch(downlink=downlink, local_update=local_update,
                     wire_rows=wire_rows, aggregate_rows=aggregate_rows,
-                    n_clients=C)
+                    n_clients=C, epoch_steps=epoch_steps)
 
 
 # ---------------------------------------------------------------------------
@@ -677,11 +737,30 @@ def _star_population_wire(base: _Wire, store) -> _Wire:
 # The server-topology round (star + sim share this body verbatim)
 # ---------------------------------------------------------------------------
 
+def _fl_scenario(fl: FLConfig):
+    """The FLConfig's scenario, or None when every knob is at its default —
+    the builders thread None so all scenario hops are statically absent
+    (the conformance contract, tests/test_scenario.py)."""
+    scn = scn_mod.Scenario.from_fl(fl)
+    return scn if scn.enabled else None
+
+
+def _attach_scenario(population, scenario):
+    """Give the population the scenario's availability trace (its mask and
+    the selection hop then share one schedule).  The population keeps its
+    own duty rate; a no-op without a scenario or when the caller already
+    attached one."""
+    if (scenario is None or population is None
+            or population.scenario is not None):
+        return population
+    return dataclasses.replace(population, scenario=scenario)
+
+
 def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
                           wire: _Wire, terms: dict, dispatch: Dispatch,
                           C: int, chunk: int,
                           population=None, tele=None,
-                          store=None) -> RoundProgram:
+                          store=None, scenario=None) -> RoundProgram:
     scaffold = fl.algorithm == "scaffold"
     simulator = topo.kind == "sim"
 
@@ -740,6 +819,15 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
                                             global_grad=ctx["global_grad"]))(
                 ctx["model_batch"], rngs)
             new_ci = None
+        elif dispatch.epoch_steps is not None:
+            # scenario epoch scaling (DESIGN.md §13): the dispatch body's
+            # local-update stage with per-client step budgets from the
+            # FedMCCS capability profile
+            n_steps, escale = dispatch.epoch_steps(ctx["batch"])
+            deltas, losses, first_losses = dispatch.local_update(
+                params, ctx["model_batch"], ctx["rng"], n_steps)
+            ctx["scn_escale"] = escale
+            new_ci = None
         else:
             # the shared dispatch body's local-update stage (DESIGN.md §8)
             deltas, losses, first_losses = dispatch.local_update(
@@ -754,15 +842,48 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
         sizes = batch.get("sizes", jnp.ones((C,), jnp.float32))
         resources = batch.get("resources", jnp.ones((C, 4), jnp.float32))
         avail = None
-        if population is not None and population.availability < 1.0:
+        if population is not None and population.availability_active:
             # per-(id, round) dropout of sampled clients — statically
-            # skipped at availability == 1.0 (the degenerate contract)
+            # skipped at availability == 1.0 with a static trace (the
+            # degenerate contract).  The mask comes from the ONE shared
+            # implementation in core.scenario via the population.
             avail = population.availability_mask(ctx["state"].round,
                                                  ctx["ids"])
+        elif (population is None and scenario is not None
+              and scenario.availability_on):
+            # dense sim/star path: the same shared trace over the static
+            # client slots (ids are the vmap lanes)
+            avail = scn_mod.availability_mask(
+                scenario, scenario.seed, scenario.availability,
+                ctx["state"].round, jnp.arange(C, dtype=jnp.int32))
         weights = sel.select(fl, ctx["r_sel"], losses=ctx["first_losses"],
                              resources=resources, sizes=sizes,
                              availability=avail)
         ctx["weights"] = weights
+        if avail is not None:
+            ctx["avail"] = avail
+        return ctx
+
+    def hop_scenario_dropout(ctx):
+        # mid-round dropout (DESIGN.md §13): a per-client survival draw
+        # against the round's elapsed virtual time (the deterministic
+        # capability latency).  Dropped clients become zero-weight rows in
+        # Dispatch.aggregate_rows — partial-update semantics, payload
+        # shapes untouched; under secagg the decode unmasks per client via
+        # the payload ctx, so zero-weighting is the existing recover path
+        # (tests/test_secure_agg.py).  Appended only when the scenario's
+        # dropout hazard is > 0 (the OFF graph has no such hop).
+        batch = ctx["batch"]
+        res = batch.get("resources", jnp.ones((C, 4), jnp.float32))
+        lat = capability_latency(res)
+        ids = ctx.get("ids")
+        if ids is None:
+            ids = jnp.arange(C, dtype=jnp.int32)
+        survive = scn_mod.survival_mask(scenario, ctx["state"].round,
+                                        ids, lat)
+        selected_before = (ctx["weights"] > 0).astype(jnp.float32)
+        ctx["weights"] = ctx["weights"] * survive
+        ctx["scn_dropped"] = (selected_before * (1.0 - survive)).sum()
         return ctx
 
     def hop_cmfl(ctx):
@@ -822,7 +943,15 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
         return ctx
 
     def hop_ledger(ctx):
-        ctx["ledger"] = _make_ledger(terms, ctx["n_sel"])
+        billed = ctx["n_sel"]
+        if scenario is not None and scenario.dropout > 0.0:
+            # a mid-round-dropped client already shipped its payload (the
+            # row is zero-weighted at aggregation, not withheld — under
+            # secagg its masked codes MUST arrive for the masks to
+            # cancel), so billing stays at the pre-dropout selection
+            billed = billed + ctx["scn_dropped"]
+        ctx["billed"] = billed
+        ctx["ledger"] = _make_ledger(terms, billed)
         return ctx
 
     def hop_telemetry(ctx):
@@ -835,11 +964,16 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
         if population is not None:
             available = population.availability_count(ctx["state"].round,
                                                       ctx["ids"])
+        elif "avail" in ctx:
+            available = ctx["avail"].sum()
         else:
             available = jnp.float32(C)
         ctx["round_stats"] = obs_tel.round_stats(
-            tele, ctx["ledger"], up_unit=ctx["n_sel"], store=ctrs,
-            selected=ctx["n_sel"], available=available)
+            tele, ctx["ledger"], up_unit=ctx["billed"], store=ctrs,
+            selected=ctx["n_sel"], available=available,
+            avail_duty=available / jnp.float32(C),
+            dropped=ctx.get("scn_dropped"),
+            epoch_scale=ctx.get("scn_escale"))
         return ctx
 
     def hop_finalize(ctx):
@@ -870,6 +1004,8 @@ def _build_server_program(model: Model, fl: FLConfig, topo: Topology,
              ("model_batch", hop_model_batch),
              ("dane_gradient", hop_dane_gradient),
              ("local_update", hop_local_update), ("select", hop_select)]
+    if scenario is not None and scenario.dropout > 0.0:
+        hops.append(("scenario_dropout", hop_scenario_dropout))
     if simulator and fl.cmfl_threshold > 0:
         hops.append(("cmfl", hop_cmfl))
     hops.append(("wire", hop_wire))
@@ -900,6 +1036,8 @@ def _build_star(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
     terms, up, down = ledger_terms(model, fl)
     scaffold = fl.algorithm == "scaffold"
     stateful = up.stateful
+    scenario = _fl_scenario(fl)
+    population = _attach_scenario(population, scenario)
     store = None
     if population is not None:
         if scaffold:
@@ -911,7 +1049,8 @@ def _build_star(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
                 f"star topology dispatches one cohort slot per mesh client "
                 f"({C}); got population.cohort={population.cohort}")
         store = population.make_store(up, abs_params)
-    dispatch = make_dispatch(model, fl, up, down, C, chunk)
+    dispatch = make_dispatch(model, fl, up, down, C, chunk,
+                             scenario=scenario)
     wire = _star_wire(mesh, pspecs, up, client_axis, abs_params,
                       need_dense=scaffold)
     if store is not None:
@@ -973,7 +1112,8 @@ def _build_star(model: Model, fl: FLConfig, topo: Topology, mesh: Mesh,
     tele = _telemetry_spec(fl, up, down, _param_sizes(model))
     program = _build_server_program(model, fl, topo, wire, terms, dispatch,
                                     C, chunk, population=population,
-                                    tele=tele, store=store)
+                                    tele=tele, store=store,
+                                    scenario=scenario)
     aux = {}
     if population is not None:
         aux["population"] = population
@@ -994,6 +1134,8 @@ def _build_sim(model: Model, fl: FLConfig, topo: Topology,
     terms, up, down = ledger_terms(model, fl)
     scaffold = fl.algorithm == "scaffold"
     stateful = up.stateful
+    scenario = _fl_scenario(fl)
+    population = _attach_scenario(population, scenario)
     store = None
     if population is not None:
         if scaffold:
@@ -1006,7 +1148,8 @@ def _build_sim(model: Model, fl: FLConfig, topo: Topology,
                 f"Topology.sim(n_clients={C})")
         C = population.cohort           # dispatch width = the cohort slice
         store = population.make_store(up, model.abstract_params())
-    dispatch = make_dispatch(model, fl, up, down, C, chunk)
+    dispatch = make_dispatch(model, fl, up, down, C, chunk,
+                             scenario=scenario)
     if store is not None:
         wire = _population_wire(dispatch, store, C)
     else:
@@ -1034,7 +1177,8 @@ def _build_sim(model: Model, fl: FLConfig, topo: Topology,
     tele = _telemetry_spec(fl, up, down, _param_sizes(model))
     program = _build_server_program(model, fl, topo, wire, terms, dispatch,
                                     C, chunk, population=population,
-                                    tele=tele, store=store)
+                                    tele=tele, store=store,
+                                    scenario=scenario)
     aux = {}
     if population is not None:
         aux.update(population=population, cohort=C)
@@ -1573,6 +1717,11 @@ def make_round_engine(model: Model, fl: FLConfig, topology: Topology,
         raise ValueError(
             f"{topology.kind} topology pins every client to a mesh device — "
             f"a streaming ClientPopulation only applies to star/sim/async")
+    if topology.kind in ("hier", "gossip") and _fl_scenario(fl) is not None:
+        raise ValueError(
+            f"scenario client dynamics (FLConfig.scenario_*) thread through "
+            f"the star/sim/async round programs; the {topology.kind} "
+            f"topology has no per-client selection/weighting hop to mask")
     if topology.kind == "star":
         assert mesh is not None, "star topology needs a mesh"
         engine = _build_star(model, fl, topology, mesh, chunk,
@@ -1679,8 +1828,20 @@ class RoundRunner:
         def run_chunk(state, k: int):
             return jax.lax.scan(body, state, None, length=k)
 
+        # Mesh paths (star/hier/gossip) pin the state's output shardings to
+        # the engine's declared NamedShardings.  Without the pin, XLA
+        # normalizes equivalent-but-unequal specs (P(None, None) -> P())
+        # on the way out, the donated output feeds chunk 2 with a sharding
+        # that no longer compares equal to chunk 1's input, and the
+        # identical chunk shape compiles twice — the star double-compile
+        # the PR-9 flight recorder surfaced.  run() device_puts the initial
+        # state onto the same shardings, closing the loop: one layout in,
+        # the same layout out, one compilation per chunk shape.
+        out_sh = getattr(engine, "state_shardings", None)
         self._jit = jax.jit(run_chunk, static_argnums=1,
-                            donate_argnums=(0,) if donate else ())
+                            donate_argnums=(0,) if donate else (),
+                            **({"out_shardings": (out_sh, None)}
+                               if out_sh is not None else {}))
 
     def cache_size(self):
         """Number of distinct compilations so far (one per chunk shape)."""
@@ -1695,6 +1856,18 @@ class RoundRunner:
         ``n <= 0`` is a no-op returning ``(state, None)``."""
         if n <= 0:
             return state, None
+        shardings = getattr(self.engine, "state_shardings", None)
+        if shardings is not None:
+            # Pre-commit the input layout on the mesh paths.  init_fn's
+            # state carries default device placement; the first chunk
+            # compiles for that layout, but its donated OUTPUT carries the
+            # program's committed NamedShardings — so the second chunk saw
+            # a different input layout and recompiled the identical chunk
+            # shape (the star double-compile the PR-9 flight recorder
+            # surfaced).  device_put here is a no-op for already-committed
+            # state, and makes chunk 1 compile against the same layout
+            # every later chunk feeds back in.
+            state = jax.device_put(state, shardings)
         chunks = []
         done = 0
         while done < n:

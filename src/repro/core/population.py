@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compress.residual_store import EVICTION_POLICIES, ResidualStore
+from repro.core import scenario as _scn
 
 SAMPLERS = ("auto", "shuffle", "stride")
 _SHUFFLE_LIMIT = 65536
@@ -74,7 +75,11 @@ class ClientPopulation:
     ``cohort == n_clients``).  ``availability < 1.0`` drops each sampled
     client i.i.d. per round via a per-id fold_in draw (the selection hop
     zero-weights them); 1.0 is statically skipped so the degenerate path
-    stays bit-exact."""
+    stays bit-exact.  ``scenario`` (a :class:`repro.core.scenario
+    .Scenario`) replaces the i.i.d. draw with its diurnal/square trace —
+    the rate stays this population's ``availability``, the trace only
+    shapes *when* each client's duty lands (core.scenario owns the single
+    shared mask implementation)."""
     n_clients: int
     cohort: int = 0
     capacity: int = 0
@@ -84,6 +89,7 @@ class ClientPopulation:
     seed: int = 0
     tail_rows: int = 5
     tail_cols: int = 16384
+    scenario: Optional[object] = None
 
     def __post_init__(self):
         if self.n_clients < 1:
@@ -147,21 +153,30 @@ class ClientPopulation:
         lattice = off + s * jnp.arange(M, dtype=jnp.uint32)
         return (lattice % jnp.uint32(C)).astype(jnp.int32)
 
+    @property
+    def availability_active(self) -> bool:
+        """Static gate for the mask hops: draws are needed either below
+        full availability or under a time-varying scenario trace."""
+        return (self.availability < 1.0
+                or (self.scenario is not None and self.scenario.diurnal))
+
     def availability_mask(self, round_idx, ids):
-        """(M,) f32 in {0,1}: per-(id, round) i.i.d. Bernoulli(availability)
-        draws.  Callers statically skip this when availability == 1.0."""
-        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 13),
-                                 round_idx)
-        u = jax.vmap(lambda i: jax.random.uniform(
-            jax.random.fold_in(key, i)))(ids)
-        return (u < self.availability).astype(jnp.float32)
+        """(M,) f32 in {0,1}: per-(id, round) availability draws — i.i.d.
+        Bernoulli(availability) by default, the scenario's diurnal/square
+        trace when one is attached.  Delegates to the ONE shared
+        implementation in ``core.scenario`` (the same function the dense
+        selection hop calls), so the Bernoulli semantics cannot drift
+        between the two consumers.  Callers statically skip this when
+        ``availability_active`` is False."""
+        return _scn.availability_mask(self.scenario, self.seed,
+                                      self.availability, round_idx, ids)
 
     def availability_count(self, round_idx, ids):
         """() f32: how many of this round's cohort are available — the
         flight recorder's availability count (repro.obs.telemetry).  Pure
         in (seed, round, ids) like ``availability_mask`` and statically the
-        full cohort at availability == 1.0, matching the callers' skip."""
-        if self.availability >= 1.0:
+        full cohort when no draw is active, matching the callers' skip."""
+        if not self.availability_active:
             return jnp.float32(int(ids.shape[0]))
         return self.availability_mask(round_idx, ids).sum()
 

@@ -1,0 +1,258 @@
+"""Scenario — realistic client dynamics behind the static config surface
+(DESIGN.md §13).
+
+The survey's client landscape is richer than a single static latency draw:
+devices join and vanish on diurnal schedules, drop mid-round, and chronic
+stragglers should not be asked for the same local work as fast clients.
+This module is the one place those dynamics are *defined*; the engines
+consume it behind static-shape, mask-based semantics so every scenario has
+a bit-exact OFF path (tests/test_scenario.py):
+
+  * **availability traces** — :func:`availability_mask` generalizes the
+    i.i.d. Bernoulli draw (``trace="static"``, op-for-op the historical
+    ``ClientPopulation.availability_mask``) to per-client phase-shifted
+    ``"square"`` duty windows and ``"diurnal"`` sinusoid-modulated
+    Bernoulli schedules.  Both hit the configured duty cycle in
+    time-average by construction (the sinusoid's amplitude is clamped to
+    ``min(rate, 1-rate)`` so its mean is exactly ``rate``).
+  * **mid-round dropout** — :func:`survival_mask` / :func:`survival_draw`:
+    a per-(round, client) survival draw ``P = exp(-hazard * latency)``
+    against the client's elapsed virtual time.  Dropped clients become
+    zero-weight rows in ``Dispatch.aggregate_rows`` (partial-update
+    semantics; payload shapes never change, and under secagg the decode
+    unmasks per client via the payload ctx, so zero-weighting cannot
+    corrupt the aggregate — tests/test_secure_agg.py).
+  * **heterogeneity-aware dispatch** — :func:`epoch_steps`: the FedMCCS
+    capability latency drives a per-client local-epoch scale
+    ``clip(median(lat)/lat_i, floor, 1)``, so chronic stragglers run
+    fewer local steps instead of only being staleness-decayed.
+  * **adaptive deadline arming** — :func:`quantile_update`: a
+    Robbins-Monro completion-time quantile tracker kept in
+    ``async_state``; the AsyncEngine arms ``next_deadline = clock +
+    q_est`` from it instead of a fixed ``async_flush_deadline``.
+
+Everything is keyed by ``jax.random.fold_in`` on (seed, round, id), never
+by carried RNG state, so masks are pure in (config, round) and any two
+consumers (the selection hop, ``ClientPopulation``, a test) recompute
+identical masks — the availability seam fix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import capability_latency
+
+TRACES = ("static", "diurnal", "square")
+
+# fold_in salts.  _AVAIL_SALT is pinned to ClientPopulation's historical
+# Bernoulli key derivation (seed + 13) — changing it would silently re-draw
+# every availability mask shipped since PR 6.
+_AVAIL_SALT = 13
+_PHASE_SALT = 29
+_DROP_SALT = 31
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Client-dynamics configuration.  Every default encodes "off": a
+    default-constructed Scenario is ``enabled == False`` and the engines
+    statically skip every scenario hop (the differential conformance
+    contract).  Reachable from ``FLConfig.scenario_*`` via
+    :meth:`from_fl` and from ``launch/train.py``'s ``--scenario-*``
+    flags."""
+
+    trace: str = "static"             # static | diurnal | square
+    period: float = 24.0              # trace period, in rounds
+    availability: float = 1.0         # duty-cycle rate (dense sim/star path;
+    #                                   a ClientPopulation keeps its own rate)
+    dropout: float = 0.0              # mid-round dropout hazard per unit
+    #                                   virtual time (0 = off)
+    epoch_scale: float = 0.0          # 0 = off; else the floor in (0, 1] of
+    #                                   the per-client local-epoch scale
+    deadline_quantile: float = 0.0    # 0 = off; else the completion-time
+    #                                   quantile the async deadline tracks
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.trace not in TRACES:
+            raise ValueError(
+                f"scenario trace {self.trace!r} not in {TRACES}")
+        if not self.period > 0:
+            raise ValueError("scenario period must be > 0 rounds")
+        if not 0.0 < self.availability <= 1.0:
+            raise ValueError("scenario availability must be in (0, 1]")
+        if self.dropout < 0.0:
+            raise ValueError("scenario dropout hazard must be >= 0")
+        if not 0.0 <= self.epoch_scale <= 1.0:
+            raise ValueError("scenario epoch_scale must be in [0, 1]")
+        if not 0.0 <= self.deadline_quantile < 1.0:
+            raise ValueError("scenario deadline_quantile must be in [0, 1)")
+
+    @staticmethod
+    def from_fl(fl) -> "Scenario":
+        return Scenario(trace=fl.scenario_trace,
+                        period=fl.scenario_period,
+                        availability=fl.scenario_availability,
+                        dropout=fl.scenario_dropout,
+                        epoch_scale=fl.scenario_epoch_scale,
+                        deadline_quantile=fl.scenario_deadline_quantile,
+                        seed=fl.scenario_seed)
+
+    @property
+    def diurnal(self) -> bool:
+        """True when the availability trace is time-varying."""
+        return self.trace != "static"
+
+    @property
+    def availability_on(self) -> bool:
+        """True when the dense (no-population) path must draw a mask."""
+        return self.diurnal or self.availability < 1.0
+
+    @property
+    def enabled(self) -> bool:
+        """Any dynamics at all?  False ⇒ the engines build today's exact
+        graphs (no scenario hop, no extra async_state keys)."""
+        return (self.diurnal or self.availability < 1.0
+                or self.dropout > 0.0 or self.epoch_scale > 0.0
+                or self.deadline_quantile > 0.0)
+
+
+# ---------------------------------------------------------------------------
+# availability traces
+# ---------------------------------------------------------------------------
+
+def bernoulli_mask(seed: int, rate: float, round_idx, ids):
+    """THE i.i.d. Bernoulli availability draw — the single implementation
+    behind both ``ClientPopulation.availability_mask`` and the dense
+    selection-hop path, pinned op-for-op to the PR-6 semantics: per-round
+    key ``fold_in(PRNGKey(seed + 13), round)``, one uniform per client id,
+    ``u < rate``.  (seed, round, id) fully determine the mask."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + _AVAIL_SALT),
+                             round_idx)
+    u = jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(key, i)))(ids)
+    return (u < rate).astype(jnp.float32)
+
+
+def client_phases(seed: int, ids):
+    """Per-client diurnal phase offsets, U[0, 1), *round-independent*
+    (keyed on id only) — a client keeps its timezone across rounds."""
+    key = jax.random.PRNGKey(seed + _PHASE_SALT)
+    return jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(key, i)))(ids)
+
+
+def availability_mask(scenario, seed: int, rate: float, round_idx, ids):
+    """Availability under the scenario's trace; the shared entry point.
+
+    * ``scenario is None`` / ``trace="static"`` — :func:`bernoulli_mask`
+      (bit-exact historical behavior).
+    * ``"square"`` — deterministic duty window: client *i* is available iff
+      ``frac(round/period + phase_i) < rate``; exact ``rate`` duty cycle
+      per client over a full period, clients joining/vanishing on a
+      schedule rather than per-round coin flips.
+    * ``"diurnal"`` — Bernoulli with sinusoidally modulated rate
+      ``p_i(t) = rate + min(rate, 1-rate) * sin(2*pi*(t/period + phase_i))``;
+      the amplitude clamp keeps ``p`` in [0, 1] and its time-average at
+      exactly ``rate``.
+
+    At ``rate == 1.0`` every trace degenerates to all-ones (``u < 1`` for
+    ``u ~ U[0, 1)``, and ``frac < 1`` always) — the conformance anchor."""
+    if scenario is None or scenario.trace == "static":
+        return bernoulli_mask(seed, rate, round_idx, ids)
+    phi = client_phases(scenario.seed, ids)
+    t = round_idx.astype(jnp.float32) / jnp.float32(scenario.period)
+    frac = jnp.mod(t + phi, 1.0)
+    if scenario.trace == "square":
+        return (frac < rate).astype(jnp.float32)
+    amp = min(rate, 1.0 - rate)
+    p = rate + jnp.float32(amp) * jnp.sin(2.0 * math.pi * frac)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + _AVAIL_SALT),
+                             round_idx)
+    u = jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(key, i)))(ids)
+    return (u < p).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# mid-round dropout
+# ---------------------------------------------------------------------------
+
+def survival_prob(scenario, latency):
+    """P(client finishes the round) = exp(-hazard * elapsed virtual time):
+    an exponential failure clock running while the client computes and
+    uploads — slower devices are exposed longer and drop more often."""
+    return jnp.exp(-jnp.float32(scenario.dropout)
+                   * jnp.asarray(latency, jnp.float32))
+
+
+def survival_mask(scenario, round_idx, ids, latency):
+    """Vectorized per-(round, client) survival draw for the synchronous
+    engines.  (seed, round, id) determine the coin; ``latency`` is the
+    deterministic capability base (:func:`capability_latency`)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(scenario.seed + _DROP_SALT),
+                             round_idx)
+    u = jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(key, i)))(ids)
+    return (u < survival_prob(scenario, latency)).astype(jnp.float32)
+
+
+def survival_draw(scenario, event_idx, client_id, latency):
+    """Scalar flavour for the AsyncEngine: one draw per arrival event,
+    keyed (event, client) so re-dispatches of the same slot re-flip."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(scenario.seed + _DROP_SALT),
+                           event_idx), client_id)
+    u = jax.random.uniform(key)
+    return (u < survival_prob(scenario, latency)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneity-aware dispatch (FedMCCS local-epoch scaling)
+# ---------------------------------------------------------------------------
+
+def epoch_steps(scenario, local_steps: int, resources):
+    """Per-client local-step budgets from the FedMCCS capability profile.
+
+    ``scale_i = clip(median(lat) / lat_i, floor, 1)`` with ``lat`` the
+    deterministic capability latency: the median device runs the full
+    ``local_steps``, chronic stragglers run a proportionally smaller
+    budget, floored at ``scenario.epoch_scale`` (and never below one
+    step).  Returns ``(n_steps (C,) int32, scale (C,) float32)``."""
+    lat = capability_latency(resources)
+    scale = jnp.clip(jnp.median(lat) / lat,
+                     jnp.float32(scenario.epoch_scale), 1.0)
+    n = jnp.maximum(1, jnp.round(local_steps * scale)).astype(jnp.int32)
+    return n, scale
+
+
+# ---------------------------------------------------------------------------
+# adaptive deadline arming (completion-time quantile tracking)
+# ---------------------------------------------------------------------------
+
+QUANTILE_ETA = 0.05
+
+
+def quantile_init(latency):
+    """Initial completion-time estimate: the mean of the first dispatch
+    generation's latencies (deterministic given the batch/profile)."""
+    return jnp.asarray(latency, jnp.float32).mean()
+
+
+def quantile_update(q, x, quantile: float, eta: float = QUANTILE_ETA):
+    """One Robbins-Monro step of the quantile tracker:
+
+        q  <-  q + step * (quantile - 1[x < q]),   step = eta * q
+
+    The indicator's expectation at the stationary point is exactly the
+    target quantile of the completion-time distribution; the multiplicative
+    step makes convergence scale-free in the latency units (oscillation
+    amplitude ~ eta * q).  Clamped below so a pathological q cannot get
+    stuck at zero."""
+    step = jnp.maximum(jnp.float32(eta) * q, 1e-4)
+    ind = (jnp.asarray(x, jnp.float32) < q).astype(jnp.float32)
+    return q + step * (jnp.float32(quantile) - ind)

@@ -274,6 +274,30 @@ class FLConfig:
     server_beta2: float = 0.99
     server_eps: float = 1e-3
 
+    # scenario pack (core.scenario, DESIGN.md §13): realistic client
+    # dynamics behind mask-based static-shape semantics.  Every default
+    # encodes "off" — Scenario.from_fl(FLConfig()).enabled is False and the
+    # engines build today's exact graphs (the differential conformance
+    # contract, tests/test_scenario.py).  ``scenario_trace`` picks the
+    # availability schedule (static = i.i.d. Bernoulli, diurnal =
+    # sinusoid-modulated, square = phase-shifted duty windows) with
+    # ``scenario_period`` rounds per cycle; ``scenario_availability`` is
+    # the duty-cycle rate on the dense sim/star path (a ClientPopulation
+    # keeps its own ``availability`` rate and only borrows the trace
+    # shape).  ``scenario_dropout`` is the mid-round dropout hazard per
+    # unit virtual time (partial-update semantics: dropped clients become
+    # zero-weight aggregate rows).  ``scenario_epoch_scale`` > 0 floors
+    # the FedMCCS per-client local-epoch scale (stragglers run fewer local
+    # steps).  ``scenario_deadline_quantile`` > 0 arms the async flush
+    # deadline adaptively from a completion-time quantile tracker.
+    scenario_trace: str = "static"
+    scenario_period: float = 24.0
+    scenario_availability: float = 1.0
+    scenario_dropout: float = 0.0
+    scenario_epoch_scale: float = 0.0
+    scenario_deadline_quantile: float = 0.0
+    scenario_seed: int = 0
+
     seed: int = 0
 
 

@@ -34,6 +34,18 @@ def cohort_data_fn(population, cfg: FedDataConfig):
     return fn
 
 
+def capability_latency(resources):
+    """The deterministic FedMCCS capability base: compute + transfer time
+    ``0.5/cpu + 0.5/link`` per client, no jitter.  This is the noise-free
+    core of every non-constant ``device_latency`` profile, and the signal
+    the scenario pack (``core.scenario``) keys mid-round dropout hazards
+    and heterogeneity-aware local-epoch scaling on — one formula, so the
+    async latency model and the scenario capability model cannot drift."""
+    cpu = jnp.maximum(resources[:, 0], 0.05)
+    link = jnp.maximum(resources[:, 3], 0.05)
+    return (0.5 / cpu + 0.5 / link).astype(jnp.float32)
+
+
 def device_latency(profile: str, resources, rng):
     """Per-client virtual round latency from the FedMCCS device profile.
 
@@ -55,9 +67,7 @@ def device_latency(profile: str, resources, rng):
     C = resources.shape[0]
     if profile == "constant":
         return jnp.ones((C,), jnp.float32)
-    cpu = jnp.maximum(resources[:, 0], 0.05)
-    link = jnp.maximum(resources[:, 3], 0.05)
-    base = (0.5 / cpu + 0.5 / link).astype(jnp.float32)
+    base = capability_latency(resources)
     if profile == "resource":
         return base
     if profile == "uniform":

@@ -71,6 +71,32 @@ def _parse():
                     help="residual-store eviction: drop the evicted "
                          "client's pipeline state, or fold it into the "
                          "count-sketch overflow tail")
+    ap.add_argument("--scenario-trace", default="static",
+                    choices=["static", "diurnal", "square"],
+                    help="client availability trace (core.scenario, "
+                         "DESIGN.md §13): static = i.i.d. Bernoulli, "
+                         "square = phase-shifted duty windows, diurnal = "
+                         "sinusoid-modulated Bernoulli")
+    ap.add_argument("--scenario-period", type=float, default=24.0,
+                    help="availability trace period, in rounds")
+    ap.add_argument("--scenario-availability", type=float, default=1.0,
+                    help="availability duty-cycle rate in (0, 1]; sets "
+                         "both the dense selection hop's rate and "
+                         "ClientPopulation.availability under --population")
+    ap.add_argument("--scenario-dropout", type=float, default=0.0,
+                    help="mid-round dropout hazard per unit virtual time; "
+                         "dropped clients become zero-weight rows "
+                         "(partial-update semantics, secagg-safe)")
+    ap.add_argument("--scenario-epoch-scale", type=float, default=0.0,
+                    help="heterogeneity-aware dispatch: floor in (0, 1] "
+                         "of the per-client local-epoch scale (FedMCCS "
+                         "capability latency); 0 disables")
+    ap.add_argument("--scenario-deadline-quantile", type=float, default=0.0,
+                    help="async adaptive deadline arming: flush deadline "
+                         "tracks this completion-time quantile instead of "
+                         "--flush-deadline; 0 disables")
+    ap.add_argument("--scenario-seed", type=int, default=0,
+                    help="seed for scenario phase/dropout draws")
     ap.add_argument("--seq", type=int, default=48)
     ap.add_argument("--batch-per-client", type=int, default=4)
     ap.add_argument("--devices", type=int, default=0,
@@ -124,6 +150,13 @@ def main():
                   staleness_alpha=args.staleness_alpha,
                   latency_profile=args.latency_profile,
                   async_flush_deadline=args.flush_deadline,
+                  scenario_trace=args.scenario_trace,
+                  scenario_period=args.scenario_period,
+                  scenario_availability=args.scenario_availability,
+                  scenario_dropout=args.scenario_dropout,
+                  scenario_epoch_scale=args.scenario_epoch_scale,
+                  scenario_deadline_quantile=args.scenario_deadline_quantile,
+                  scenario_seed=args.scenario_seed,
                   telemetry=bool(args.trace))
 
     tracer = None
@@ -169,9 +202,12 @@ def main():
         from repro.data.pipeline import cohort_data_fn
 
         N = args.population
+        # one availability flag for both paths: the population keeps the
+        # duty rate, the scenario (attached by the engine) shapes the trace
         pop = ClientPopulation(n_clients=N, cohort=min(args.cohort, N),
                                capacity=args.store_capacity,
-                               eviction=args.eviction)
+                               eviction=args.eviction,
+                               availability=args.scenario_availability)
         data = FedDataConfig(vocab_size=cfg.vocab_size, num_clients=N,
                              seq_len=args.seq,
                              batch_per_client=args.batch_per_client,

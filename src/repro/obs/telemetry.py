@@ -46,6 +46,10 @@ from repro.compress.pipeline import stage_input_lens, stage_sequence
 STALENESS_EDGES = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
 N_STALENESS_BUCKETS = len(STALENESS_EDGES) + 1
 
+# epoch-scale histogram: uniform buckets over (0, 1] — bucket i counts
+# scales in [i/8, (i+1)/8), scale 1.0 lands in the last bucket
+N_ESCALE_BUCKETS = 8
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -68,6 +72,9 @@ class RoundStats:
     store_sketch_recovered: jax.Array  # () misses answered from the tail
     selected: jax.Array                # () clients aggregated this round
     available: jax.Array               # () cohort members available
+    avail_duty: jax.Array              # () available / cohort (scenario duty)
+    dropped: jax.Array                 # () mid-round scenario dropouts
+    epoch_scale_hist: jax.Array        # (N_ESCALE_BUCKETS,) local-epoch scale
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +147,18 @@ def staleness_hist(tau, weights=None) -> jax.Array:
     return jnp.zeros((N_STALENESS_BUCKETS,), jnp.float32).at[idx].add(w)
 
 
+def epoch_scale_hist(scale, weights=None) -> jax.Array:
+    """(N_ESCALE_BUCKETS,) f32 histogram of per-client local-epoch scales
+    (the scenario's heterogeneity-aware dispatch, ``scenario.epoch_steps``).
+    ``weights`` masks out unselected clients."""
+    scale = jnp.atleast_1d(jnp.asarray(scale, jnp.float32))
+    w = jnp.ones_like(scale) if weights is None else \
+        jnp.asarray(weights, jnp.float32).reshape(scale.shape)
+    idx = jnp.clip(jnp.floor(scale * N_ESCALE_BUCKETS).astype(jnp.int32),
+                   0, N_ESCALE_BUCKETS - 1)
+    return jnp.zeros((N_ESCALE_BUCKETS,), jnp.float32).at[idx].add(w)
+
+
 def _residual_slots(table, unit, total) -> jax.Array:
     """Stage slots: ``unit * table[i]`` for every slot but the last; the
     last is ``total - sum(previous)``, so the reconstruction
@@ -155,19 +174,26 @@ def _residual_slots(table, unit, total) -> jax.Array:
 
 def round_stats(spec: TelemetrySpec, ledger, *, up_unit, down_unit=None,
                 staleness=None, staleness_weights=None, fill=None,
-                store=None, selected=None, available=None) -> RoundStats:
+                store=None, selected=None, available=None,
+                avail_duty=None, dropped=None,
+                epoch_scale=None, epoch_scale_weights=None) -> RoundStats:
     """Assemble one round's ``RoundStats`` from already-computed values.
 
     ``up_unit`` multiplies the per-unit stage table (``n_sel`` on the
     server topologies, 1.0 where the ledger is already absolute);
     ``down_unit`` defaults to ``up_unit``.  ``store`` is the dict
-    ``ResidualStore.stats`` returns.  Everything absent defaults to 0."""
+    ``ResidualStore.stats`` returns.  ``avail_duty`` / ``dropped`` /
+    ``epoch_scale`` are the scenario counters (core.scenario, DESIGN.md
+    §13).  Everything absent defaults to 0."""
     z = jnp.zeros((), jnp.float32)
     f = lambda v: z if v is None else jnp.asarray(v, jnp.float32)
     store = store or {}
     hist = (jnp.zeros((N_STALENESS_BUCKETS,), jnp.float32)
             if staleness is None
             else staleness_hist(staleness, staleness_weights))
+    e_hist = (jnp.zeros((N_ESCALE_BUCKETS,), jnp.float32)
+              if epoch_scale is None
+              else epoch_scale_hist(epoch_scale, epoch_scale_weights))
     return RoundStats(
         up_stage_bytes=_residual_slots(spec.up_table, up_unit,
                                        ledger.uplink_wire),
@@ -182,6 +208,9 @@ def round_stats(spec: TelemetrySpec, ledger, *, up_unit, down_unit=None,
         store_sketch_recovered=f(store.get("sketch_recovered")),
         selected=f(selected),
         available=f(available),
+        avail_duty=f(avail_duty),
+        dropped=f(dropped),
+        epoch_scale_hist=e_hist,
     )
 
 
@@ -195,4 +224,6 @@ def zero_stats(spec: TelemetrySpec) -> RoundStats:
         staleness_hist=jnp.zeros((N_STALENESS_BUCKETS,), jnp.float32),
         buffer_fill=z, store_hits=z, store_misses=z, store_evictions=z,
         store_sketch_recovered=z, selected=z, available=z,
+        avail_duty=z, dropped=z,
+        epoch_scale_hist=jnp.zeros((N_ESCALE_BUCKETS,), jnp.float32),
     )

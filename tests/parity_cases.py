@@ -148,3 +148,31 @@ def build(c, backend):
     elif c["wrapper"] == "mc":
         pipe = momentum_correction(pipe, momentum=0.9)
     return pipe
+
+
+# --- scenario conformance cases (core.scenario, DESIGN.md §13) -------------
+# Each entry is a *degenerate-but-enabled* scenario: the dynamics hops ARE
+# in the graph (Scenario.enabled is True, so this is not the trivial
+# statically-skipped path) but every mask they draw is the identity — the
+# square/diurnal traces at duty 1.0 emit all-ones, the epoch-scale floor
+# 1.0 clips every client to the full local_steps budget.  The conformance
+# harness (tests/test_scenario.py) asserts params, comm_state, and ledger
+# bytes stay BIT-EXACT vs the scenario-free engines across these wire
+# specs — including the Pallas kernel path, the bit-packed fused wire, and
+# the secagg masked wire.
+def scenario_case(name, spec, **fl_kw):
+    return dict(name=name, spec=spec, fl=fl_kw)
+
+
+SCENARIO_CASES = [
+    scenario_case("square_duty1_ef", "topk:0.25>>qsgd:8",
+                  scenario_trace="square"),
+    scenario_case("diurnal_rate1_kernel", "topk:0.25@kernel>>qsgd:8",
+                  scenario_trace="diurnal"),
+    scenario_case("escale_floor1_fused", "qsgd:4@fused",
+                  scenario_epoch_scale=1.0),
+    scenario_case("square_duty1_secagg", "qsgd:4>>secagg",
+                  scenario_trace="square"),
+    scenario_case("diurnal_escale_combo", "topk:0.25>>qsgd:8",
+                  scenario_trace="diurnal", scenario_epoch_scale=1.0),
+]

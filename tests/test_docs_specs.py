@@ -151,6 +151,19 @@ def test_docs_quote_the_obs_flags():
     assert "--trace" in quoted and "--profile-dir" in quoted, quoted
 
 
+def test_docs_quote_the_scenario_flags():
+    """The Client-dynamics quickstart must advertise the scenario pack:
+    the `--scenario-*` family exists in the train CLI and at least the
+    trace/dropout knobs are quoted by a doc."""
+    defined = {f for f in _train_flags() if f.startswith("--scenario-")}
+    assert {"--scenario-trace", "--scenario-availability",
+            "--scenario-dropout", "--scenario-epoch-scale",
+            "--scenario-deadline-quantile"} <= defined, defined
+    quoted = {flag for p in _doc_train_flags() for _, flag in [p.values]}
+    assert "--scenario-trace" in quoted, quoted
+    assert "--scenario-dropout" in quoted, quoted
+
+
 @pytest.mark.parametrize("doc,flag", _doc_train_flags())
 def test_doc_train_flag_exists(doc, flag):
     """A doc advertising a train-CLI flag that was renamed or removed rots

@@ -360,3 +360,38 @@ def test_name_stage_mismatch():
     # explicit expected_total overrides the table sum
     assert name_stage_mismatch(names, table, measured=5000.0,
                                expected_total=5000.0) == ""
+
+
+# ---------------------------------------------------------------------------
+# Star driver compiles once per chunk shape
+# ---------------------------------------------------------------------------
+
+def test_star_runner_single_compile_per_chunk_shape():
+    # Regression: the star RoundRunner used to recompile every chunk after
+    # the first, because donated outputs came back with fully-replicated
+    # shardings that no longer matched the jit's inferred input shardings.
+    # Pinning out_shardings (and device_put-ing the carried state) keeps
+    # the executable cache at exactly one entry across same-shape chunks.
+    from repro.core.engine import RoundRunner
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import Model
+    mesh = make_host_mesh(model=1)
+    model = Model(CFG)
+    fl = FLConfig(algorithm="fedavg", local_steps=1, local_lr=0.2,
+                  uplink_compressor="topk:0.25>>qsgd:8")
+    e = make_round_engine(model, fl, Topology.star(), mesh=mesh, chunk=32)
+    star_data = FedDataConfig(vocab_size=CFG.vocab_size,
+                              num_clients=e.n_clients, seq_len=32,
+                              batch_per_client=2)
+
+    def data_fn(r):
+        return sample_round(star_data,
+                            jax.random.fold_in(jax.random.PRNGKey(1), r))
+
+    runner = RoundRunner(e, data_fn, chunk=2)
+    st = e.init_fn(jax.random.PRNGKey(0))
+    st, _ = runner.run(st, 4)  # two chunks of the same shape
+    n = runner.cache_size()
+    if n is None:
+        pytest.skip("jit cache size introspection unavailable on this jax")
+    assert n == 1, f"star runner recompiled: {n} executables for one shape"

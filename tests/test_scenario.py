@@ -1,0 +1,538 @@
+"""Scenario conformance harness (core.scenario, DESIGN.md §13).
+
+The headline contract, in the style of tests/test_obs.py: client-dynamics
+scenarios are **masks over today's engines**, never new engines.  Two
+anchors prove it differentially:
+
+  * **OFF is the identity graph** — a default FLConfig builds engines with
+    no scenario hop and no extra async_state keys (structural assert), so
+    the scenario-free path is literally unchanged code.
+  * **Degenerate-ON is bit-exact** — ``parity_cases.SCENARIO_CASES`` runs
+    enabled-but-identity scenarios (duty-1.0 traces, epoch-scale floor
+    1.0) through sim / population / async engines over kernel, fused, and
+    secagg wire specs: params, comm_state, and ledger bytes must match the
+    scenario-free run bit-for-bit, proving the dynamics enter ONLY through
+    the masks they draw.
+
+Around the anchors: trace duty-cycle and dropout-shape properties
+(hypothesis when installed, fixed-seed sweep otherwise), the adaptive
+deadline's quantile-tracker convergence, the availability seam regression
+(population and dense selection share ONE mask implementation), secagg
+safety of dropout zero-weighting, and the ResidualStore eviction-under-
+churn property (scenario-driven cohort membership never corrupts LRU
+stamps; store counters reconcile with the scenario's masks).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis  # noqa: F401 — probe only; see `fuzz` below
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from parity_cases import SCENARIO_CASES
+from repro.compress.residual_store import ResidualStore
+from repro.configs.registry import get_arch
+from repro.core import scenario as scn
+from repro.core.engine import (Topology, make_round_engine, run_rounds,
+                               uplink_pipeline)
+from repro.core.population import ClientPopulation
+from repro.core.types import FLConfig
+from repro.data.pipeline import capability_latency, cohort_data_fn
+from repro.data.synthetic import FedDataConfig, sample_round
+
+
+def fuzz(*strategies, fallback, max_examples=10):
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(*strategies)(fn))
+        nargs = fn.__code__.co_argcount
+        argnames = ",".join(fn.__code__.co_varnames[:nargs])
+        vals = [t[0] for t in fallback] if nargs == 1 else fallback
+        return pytest.mark.parametrize(argnames, vals)(fn)
+    return deco
+
+
+def _st(builder):
+    return builder() if HAVE_HYPOTHESIS else None
+
+
+CFG = get_arch("paper_lm")
+DATA = FedDataConfig(vocab_size=CFG.vocab_size, num_clients=4, seq_len=32,
+                     batch_per_client=2, heterogeneity=1.5)
+
+
+def _data_fn(r):
+    return sample_round(DATA, jax.random.fold_in(jax.random.PRNGKey(1), r))
+
+
+def _run(spec, topo_fn, pop=None, n=3, data_fn=None, **fl_kw):
+    from repro.models.model import Model
+    model = Model(CFG)
+    fl_kw.setdefault("local_steps", 2)
+    fl = FLConfig(algorithm="fedavg", local_lr=0.2,
+                  uplink_compressor=spec, **fl_kw)
+    dfn = data_fn or _data_fn
+    e = make_round_engine(model, fl, topo_fn(), chunk=32, data_fn=dfn,
+                          population=pop)
+    state = e.init_fn(jax.random.PRNGKey(0))
+    state, ms = run_rounds(e, state, dfn, n, chunk=1, donate=False)
+    return e, state, ms
+
+
+def _assert_leaves_equal(what, a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), f"{what}: leaf count diverged"
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y),
+                              equal_nan=True), f"{what} diverged"
+
+
+# ---------------------------------------------------------------------------
+# structural OFF: a default config builds today's exact engines
+# ---------------------------------------------------------------------------
+
+def test_default_config_has_no_scenario():
+    assert not scn.Scenario.from_fl(FLConfig()).enabled
+    # every identity knob individually keeps the scenario disabled
+    assert not scn.Scenario(trace="static", availability=1.0, dropout=0.0,
+                            epoch_scale=0.0, deadline_quantile=0.0).enabled
+    assert scn.Scenario(trace="square").enabled
+    assert scn.Scenario(availability=0.5).enabled
+    assert scn.Scenario(dropout=0.1).enabled
+    assert scn.Scenario(epoch_scale=0.5).enabled
+    assert scn.Scenario(deadline_quantile=0.9).enabled
+
+
+def test_off_graph_has_no_scenario_hops():
+    e, state, _ = _run("topk:0.25>>qsgd:8", lambda: Topology.sim(4), n=1)
+    names = [name for name, _ in e.program.hops]
+    assert "scenario_dropout" not in names
+    # the dispatch body carries no epoch-steps branch when disabled
+    assert all(k not in (state.async_state or {})
+               for k in ("q_est", "slot_lat"))
+
+
+def test_off_async_state_has_no_scenario_keys():
+    e, state, _ = _run("topk:0.25>>qsgd:8",
+                       lambda: Topology.async_(4, buffer_size=2), n=1)
+    assert "q_est" not in state.async_state
+    assert "slot_lat" not in state.async_state
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError):
+        scn.Scenario(trace="lunar")
+    with pytest.raises(ValueError):
+        scn.Scenario(availability=0.0)
+    with pytest.raises(ValueError):
+        scn.Scenario(dropout=-1.0)
+    with pytest.raises(ValueError):
+        scn.Scenario(epoch_scale=1.5)
+    with pytest.raises(ValueError):
+        scn.Scenario(deadline_quantile=1.0)
+
+
+def test_hier_and_gossip_reject_scenarios():
+    from repro.models.model import Model
+    model = Model(CFG)
+    fl = FLConfig(scenario_dropout=0.5)
+    for topo in (Topology.hier(4), Topology.gossip()):
+        with pytest.raises(ValueError, match="scenario"):
+            make_round_engine(model, fl, topo, chunk=32, data_fn=_data_fn)
+
+
+def test_async_rejects_availability_traces():
+    from repro.models.model import Model
+    model = Model(CFG)
+    for kw in (dict(scenario_trace="square"),
+               dict(scenario_availability=0.5)):
+        with pytest.raises(ValueError, match="completion order"):
+            make_round_engine(Model(CFG), FLConfig(**kw),
+                              Topology.async_(4), chunk=32,
+                              data_fn=_data_fn)
+
+
+def test_epoch_scale_needs_multi_step_scannable_algorithm():
+    from repro.models.model import Model
+    with pytest.raises(ValueError, match="local_steps"):
+        make_round_engine(Model(CFG),
+                          FLConfig(scenario_epoch_scale=0.5, local_steps=1),
+                          Topology.sim(4), chunk=32, data_fn=_data_fn)
+    with pytest.raises(ValueError, match="scaffold"):
+        make_round_engine(Model(CFG),
+                          FLConfig(scenario_epoch_scale=0.5, local_steps=2,
+                                   algorithm="scaffold"),
+                          Topology.sim(4), chunk=32, data_fn=_data_fn)
+
+
+# ---------------------------------------------------------------------------
+# the differential anchor: degenerate-ON scenarios are bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c", SCENARIO_CASES, ids=lambda c: c["name"])
+def test_degenerate_scenario_bitexact_sim(c):
+    off = _run(c["spec"], lambda: Topology.sim(4))
+    on = _run(c["spec"], lambda: Topology.sim(4), **c["fl"])
+    _assert_leaves_equal(f"sim/{c['name']} params", off[1].params,
+                         on[1].params)
+    _assert_leaves_equal(f"sim/{c['name']} comm_state", off[1].comm_state,
+                         on[1].comm_state)
+    _assert_leaves_equal(f"sim/{c['name']} ledger", off[2]["ledger"],
+                         on[2]["ledger"])
+
+
+@pytest.mark.parametrize("avail,fl_kw", [
+    # duty-1.0 square trace: the mask hop runs and emits all-ones
+    (1.0, dict(scenario_trace="square")),
+    # epoch-scale floor 1.0 under a genuinely sub-1.0 Bernoulli rate
+    (0.8, dict(scenario_epoch_scale=1.0)),
+], ids=["square_duty1", "escale_floor1"])
+def test_degenerate_scenario_bitexact_population(avail, fl_kw):
+    def make():
+        return ClientPopulation(n_clients=16, cohort=8, availability=avail,
+                                seed=3)
+    data = FedDataConfig(vocab_size=CFG.vocab_size, num_clients=16,
+                         seq_len=32, batch_per_client=2, heterogeneity=1.5)
+    off = _run("topk:0.25>>qsgd:8", lambda: Topology.sim(16), pop=make(),
+               data_fn=cohort_data_fn(make(), data))
+    on = _run("topk:0.25>>qsgd:8", lambda: Topology.sim(16), pop=make(),
+              data_fn=cohort_data_fn(make(), data), **fl_kw)
+    _assert_leaves_equal("pop params", off[1].params, on[1].params)
+    _assert_leaves_equal("pop comm_state", off[1].comm_state,
+                         on[1].comm_state)
+    _assert_leaves_equal("pop ledger", off[2]["ledger"], on[2]["ledger"])
+
+
+def test_degenerate_scenario_bitexact_async():
+    topo = lambda: Topology.async_(4, buffer_size=2,
+                                   latency_profile="heavy_tail")
+    off = _run("topk:0.25>>qsgd:8", topo, n=6)
+    on = _run("topk:0.25>>qsgd:8", topo, n=6, scenario_epoch_scale=1.0)
+    _assert_leaves_equal("async params", off[1].params, on[1].params)
+    _assert_leaves_equal("async comm_state", off[1].comm_state,
+                         on[1].comm_state)
+    _assert_leaves_equal("async ledger", off[2]["ledger"], on[2]["ledger"])
+
+
+# ---------------------------------------------------------------------------
+# availability seam (one shared mask implementation)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,rate", [(0, 0.5), (3, 0.8), (11, 0.3)])
+def test_population_and_scenario_share_the_bernoulli_draw(seed, rate):
+    """Regression for the selection/population seam: identical (seed,
+    round) must yield identical masks whether drawn through the population
+    or directly from core.scenario — they are the same function now."""
+    pop = ClientPopulation(n_clients=32, cohort=32, availability=rate,
+                           seed=seed)
+    ids = jnp.arange(32, dtype=jnp.int32)
+    for r in (0, 1, 7, 100):
+        r = jnp.int32(r)
+        via_pop = pop.availability_mask(r, ids)
+        direct = scn.bernoulli_mask(seed, rate, r, ids)
+        shared = scn.availability_mask(None, seed, rate, r, ids)
+        assert np.array_equal(np.asarray(via_pop), np.asarray(direct))
+        assert np.array_equal(np.asarray(via_pop), np.asarray(shared))
+
+
+def test_population_scenario_trace_delegates():
+    s = scn.Scenario(trace="square", period=8.0)
+    import dataclasses
+    pop = dataclasses.replace(
+        ClientPopulation(n_clients=16, cohort=16, availability=0.5, seed=2),
+        scenario=s)
+    ids = jnp.arange(16, dtype=jnp.int32)
+    for r in (0, 3, 9):
+        r = jnp.int32(r)
+        via_pop = pop.availability_mask(r, ids)
+        direct = scn.availability_mask(s, 2, 0.5, r, ids)
+        assert np.array_equal(np.asarray(via_pop), np.asarray(direct))
+
+
+# ---------------------------------------------------------------------------
+# trace properties: duty cycles
+# ---------------------------------------------------------------------------
+
+@fuzz(_st(lambda: st.floats(0.1, 0.9)), _st(lambda: st.integers(0, 99)),
+      fallback=[(0.25, 0), (0.5, 7), (0.75, 42)], max_examples=6)
+def test_square_trace_hits_exact_duty_cycle(rate, seed):
+    """Over full periods, every client's square-trace duty cycle equals
+    the configured rate up to the 1/period quantization of the window."""
+    period = 8.0
+    s = scn.Scenario(trace="square", period=period, availability=rate,
+                     seed=seed)
+    ids = jnp.arange(16, dtype=jnp.int32)
+    rounds = int(period) * 10
+    masks = np.stack([
+        np.asarray(scn.availability_mask(s, seed, rate, jnp.int32(r), ids))
+        for r in range(rounds)])
+    duty = masks.mean(axis=0)                       # per-client
+    assert np.all(np.abs(duty - rate) <= 1.0 / period + 1e-6), duty
+
+
+@fuzz(_st(lambda: st.floats(0.2, 0.8)), _st(lambda: st.integers(0, 99)),
+      fallback=[(0.3, 1), (0.5, 5), (0.7, 23)], max_examples=4)
+def test_diurnal_trace_hits_mean_duty_cycle(rate, seed):
+    """The sinusoid's amplitude clamp keeps the diurnal trace's
+    time-average duty at the configured rate (population mean over clients
+    x rounds; 5-sigma Bernoulli tolerance)."""
+    period = 8.0
+    s = scn.Scenario(trace="diurnal", period=period, availability=rate,
+                     seed=seed)
+    ids = jnp.arange(32, dtype=jnp.int32)
+    rounds = int(period) * 8
+    masks = np.stack([
+        np.asarray(scn.availability_mask(s, seed, rate, jnp.int32(r), ids))
+        for r in range(rounds)])
+    n = masks.size
+    sigma = np.sqrt(rate * (1 - rate) / n)
+    assert abs(masks.mean() - rate) < 5 * sigma + 1.0 / n, masks.mean()
+
+
+def test_diurnal_rate_modulates_with_phase():
+    """The trace is genuinely time-varying PER CLIENT: availability draws
+    binned by each client's position in its own period show the sinusoid
+    (population means hide it — random phases decorrelate the clients)."""
+    period, rate = 8.0, 0.5
+    s = scn.Scenario(trace="diurnal", period=period, availability=rate,
+                     seed=0)
+    ids = jnp.arange(256, dtype=jnp.int32)
+    phi = np.asarray(scn.client_phases(0, ids))
+    peak, trough = [], []
+    for r in range(64):
+        frac = np.mod(r / period + phi, 1.0)
+        sine = np.sin(2 * np.pi * frac)
+        m = np.asarray(scn.availability_mask(s, 0, rate, jnp.int32(r), ids))
+        peak.extend(m[sine > 0.9].tolist())
+        trough.extend(m[sine < -0.9].tolist())
+    # p = 0.5 + 0.5*sin: near-certain at the peak, near-zero at the trough
+    assert np.mean(peak) > 0.85, np.mean(peak)
+    assert np.mean(trough) < 0.15, np.mean(trough)
+
+
+# ---------------------------------------------------------------------------
+# dropout properties
+# ---------------------------------------------------------------------------
+
+def test_dropout_never_changes_payload_shapes_or_bytes():
+    """Partial-update semantics: dropout zero-weights rows, it never
+    reshapes the wire — ledger bytes are identical to the dropout-free
+    run, round for round."""
+    off = _run("topk:0.25>>qsgd:8", lambda: Topology.sim(4), n=4)
+    on = _run("topk:0.25>>qsgd:8", lambda: Topology.sim(4), n=4,
+              scenario_dropout=1.0)
+    _assert_leaves_equal("dropout ledger bytes", off[2]["ledger"],
+                         on[2]["ledger"])
+    # ... but it does change the trajectory (the hazard is huge)
+    la = jax.tree.leaves(off[1].params)
+    lb = jax.tree.leaves(on[1].params)
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def test_dropout_secagg_masked_matches_clear():
+    """Secagg safety: pairwise masks cancel identically whether or not
+    the aggregation zero-weights dropped clients — the masked wire with
+    dropout reproduces the clear wire with dropout bit-exactly."""
+    kw = dict(scenario_dropout=0.5)
+    clear = _run("qsgd:4", lambda: Topology.sim(4), n=3, **kw)
+    masked = _run("qsgd:4>>secagg", lambda: Topology.sim(4), n=3, **kw)
+    _assert_leaves_equal("secagg+dropout params", clear[1].params,
+                         masked[1].params)
+
+
+@fuzz(_st(lambda: st.floats(0.0, 3.0)), fallback=[(0.0,), (0.5,), (2.0,)],
+      max_examples=6)
+def test_survival_prob_monotone_in_latency(hazard):
+    s = scn.Scenario(dropout=hazard) if hazard > 0 else scn.Scenario()
+    if hazard == 0.0:
+        return
+    lat = jnp.asarray([0.1, 1.0, 10.0], jnp.float32)
+    p = np.asarray(scn.survival_prob(s, lat))
+    assert np.all(np.diff(p) <= 1e-7)             # slower => dies more
+    assert np.all((p >= 0.0) & (p <= 1.0))
+
+
+def test_scenario_telemetry_counters():
+    e, state, ms = _run("topk:0.25>>qsgd:8", lambda: Topology.sim(4), n=4,
+                        telemetry=True, scenario_trace="diurnal",
+                        scenario_availability=0.6, scenario_dropout=0.5)
+    rs = ms["round_stats"]
+    duty = np.asarray(rs.avail_duty)
+    dropped = np.asarray(rs.dropped)
+    assert np.all((duty >= 0.0) & (duty <= 1.0))
+    # dropped counts previously-selected clients that died mid-round, and
+    # selected counts the survivors — together they cannot exceed the
+    # client axis
+    assert np.all(dropped + np.asarray(rs.selected) <= 4.0 + 1e-6)
+    assert np.all(dropped >= 0.0)
+    assert np.all(np.asarray(rs.available) == duty * 4.0)
+
+
+def test_epoch_scale_histogram_populated():
+    e, state, ms = _run("topk:0.25>>qsgd:8", lambda: Topology.sim(4), n=2,
+                        telemetry=True, scenario_epoch_scale=0.25)
+    h = np.asarray(ms["round_stats"].epoch_scale_hist)
+    assert h.shape[-1] == 8
+    assert np.all(h.sum(axis=-1) == 4.0)          # one bucket per client
+
+
+# ---------------------------------------------------------------------------
+# heterogeneity-aware dispatch
+# ---------------------------------------------------------------------------
+
+def test_epoch_steps_budgets():
+    res = np.ones((8, 4), np.float32)
+    res[:, 0] = np.linspace(0.1, 2.0, 8)          # cpu spread
+    s = scn.Scenario(epoch_scale=0.25)
+    n, scale = scn.epoch_steps(s, 8, jnp.asarray(res))
+    n, scale = np.asarray(n), np.asarray(scale)
+    assert np.all((n >= 1) & (n <= 8))
+    assert np.all((scale >= 0.25) & (scale <= 1.0))
+    lat = np.asarray(capability_latency(jnp.asarray(res)))
+    # slowest client gets the floor; the median device runs full budget
+    assert scale[np.argmax(lat)] == 0.25
+    assert n[np.argsort(lat)[3]] == 8 or n[np.argsort(lat)[4]] == 8
+
+
+def test_epoch_scale_changes_trajectory_but_not_shapes():
+    off = _run("topk:0.25>>qsgd:8", lambda: Topology.sim(4), n=3)
+    on = _run("topk:0.25>>qsgd:8", lambda: Topology.sim(4), n=3,
+              scenario_epoch_scale=0.25)
+    _assert_leaves_equal("escale ledger", off[2]["ledger"], on[2]["ledger"])
+    la, lb = jax.tree.leaves(off[1].params), jax.tree.leaves(on[1].params)
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# adaptive deadline: quantile tracker
+# ---------------------------------------------------------------------------
+
+@fuzz(_st(lambda: st.floats(0.2, 0.95)), _st(lambda: st.integers(0, 999)),
+      fallback=[(0.5, 0), (0.9, 7), (0.25, 99)], max_examples=6)
+def test_quantile_update_converges_on_uniform(quantile, seed):
+    """Robbins-Monro convergence: on U[1, 2] samples the tracker settles
+    near the true quantile ``1 + quantile`` (oscillation ~ eta * q)."""
+    rng = np.random.RandomState(seed)
+    q = jnp.float32(1.5)
+    for _ in range(3000):
+        q = scn.quantile_update(q, jnp.float32(rng.uniform(1.0, 2.0)),
+                                quantile)
+    true_q = 1.0 + quantile
+    assert abs(float(q) - true_q) < 0.25, (float(q), true_q)
+
+
+def test_async_adaptive_deadline_tracks_completion_quantile():
+    e, state, ms = _run("topk:0.25>>qsgd:8",
+                        lambda: Topology.async_(
+                            4, buffer_size=4, latency_profile="constant"),
+                        n=24, scenario_deadline_quantile=0.5)
+    q = np.asarray(ms["q_est"])
+    # constant profile: every completion takes 1.0 virtual seconds — the
+    # estimate must stay in a tight band around it
+    assert abs(q[-1] - 1.0) < 0.5, q[-1]
+    assert "q_est" in state.async_state
+    assert float(state.async_state["next_deadline"]) < np.inf
+
+
+def test_async_dropout_zero_weights_arrivals():
+    topo = lambda: Topology.async_(4, buffer_size=2,
+                                   latency_profile="heavy_tail")
+    off = _run("topk:0.25>>qsgd:8", topo, n=8)
+    on = _run("topk:0.25>>qsgd:8", topo, n=8, scenario_dropout=0.5)
+    # shapes and ledger identical (payloads still arrive, zero-weighted)
+    _assert_leaves_equal("async dropout ledger", off[2]["ledger"],
+                         on[2]["ledger"])
+    la, lb = jax.tree.leaves(off[1].params), jax.tree.leaves(on[1].params)
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# ResidualStore eviction under scenario churn (satellite: store-vs-scenario)
+# ---------------------------------------------------------------------------
+
+def _churn_store(eviction, seed, rounds=24):
+    """Drive a small store with scenario-masked cohorts; return per-round
+    (ids, stats) plus the store for invariants."""
+    params = {"w": jnp.zeros((64,), jnp.float32)}
+    pipe = uplink_pipeline(FLConfig(uplink_compressor="topk:0.5>>qsgd:8"))
+    store = ResidualStore(pipe, params, capacity=8, eviction=eviction)
+    state = store.init()
+    s = scn.Scenario(trace="square", period=6.0, availability=0.5,
+                     seed=seed)
+    ids_all = jnp.arange(16, dtype=jnp.int32)
+    log = []
+    for r in range(rounds):
+        mask = np.asarray(scn.availability_mask(s, seed, 0.5, jnp.int32(r),
+                                                ids_all))
+        # fixed-shape cohort: the 4 available (or lowest-id) clients
+        order = np.lexsort((np.arange(16), -mask))
+        ids = jnp.asarray(np.sort(order[:4]).astype(np.int32))
+        stats = {k: float(v) for k, v in store.stats(state, ids).items()}
+        rows, state = store.gather(state, ids)
+        rows = jax.tree.map(lambda x: x + 1.0, rows)
+        state = store.scatter(state, ids, rows)
+        log.append((np.asarray(ids), stats))
+    return store, state, log
+
+
+@pytest.mark.parametrize("eviction", ["drop", "sketch"])
+def test_store_eviction_under_scenario_churn(eviction):
+    """Scenario-driven cohort membership never corrupts the LRU slab:
+    counters reconcile every round, clients re-participating immediately
+    always hit (capacity = 2 x cohort keeps the last two cohorts
+    resident), and the resident set tracks the most recent scatters."""
+    store, state, log = _churn_store(eviction, seed=5)
+    prev = None
+    for ids, stats in log:
+        assert stats["hits"] + stats["misses"] == 4.0, stats
+        assert stats["evictions"] <= stats["misses"]
+        if eviction == "sketch":
+            assert stats["sketch_recovered"] == stats["misses"]
+        else:
+            assert stats["sketch_recovered"] == 0.0
+        if prev is not None:
+            # back-to-back participants must be resident: the previous
+            # round's scatter stamped them most-recent, and one round can
+            # evict at most cohort(=4) of the 8 slots — the LRU ones
+            repeat = len(set(ids.tolist()) & set(prev.tolist()))
+            assert stats["hits"] >= repeat, (ids, prev, stats)
+        prev = ids
+    # final slab: every resident client id was scattered at some point
+    resident = np.asarray(state["client"])
+    seen = set()
+    for ids, _ in log:
+        seen.update(ids.tolist())
+    assert set(resident[resident >= 0].tolist()) <= seen
+
+
+def test_store_counters_reconcile_with_engine_scenario():
+    """End-to-end: the telemetry store counters of a population run under
+    a scenario reconcile — every round gathers exactly the cohort."""
+    def make():
+        return ClientPopulation(n_clients=16, cohort=4, capacity=8,
+                                availability=0.7, seed=1)
+    data = FedDataConfig(vocab_size=CFG.vocab_size, num_clients=16,
+                         seq_len=32, batch_per_client=2, heterogeneity=1.5)
+    e, state, ms = _run("topk:0.25>>qsgd:8", lambda: Topology.sim(16),
+                        pop=make(), data_fn=cohort_data_fn(make(), data),
+                        n=6, telemetry=True, scenario_trace="square",
+                        scenario_dropout=0.3)
+    rs = ms["round_stats"]
+    hits = np.asarray(rs.store_hits)
+    misses = np.asarray(rs.store_misses)
+    assert np.all(hits + misses == 4.0)
+    # selected counts post-dropout survivors, so the two partition the
+    # pre-dropout selection: together they never exceed the cohort
+    dropped = np.asarray(rs.dropped)
+    selected = np.asarray(rs.selected)
+    assert np.all(dropped >= 0.0) and np.all(dropped + selected <= 4.0)
+    assert np.all(np.asarray(rs.avail_duty) <= 1.0)
